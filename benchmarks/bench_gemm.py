@@ -1,0 +1,53 @@
+"""Paper Fig. 2/5: binary128-class GEMM throughput vs matrix size.
+
+CPU-measured GFlops for the three backends (ozaki / xla / pallas-interpret),
+plus the f64 'double' control and the TPU-v5e roofline projection for the
+Ozaki-on-MXU path (the deployment target; this container has no TPU).
+
+GFlops counts the BINARY128-CLASS operations (2*m*n*k per Eq. 4 of the
+paper) — the same accounting the paper uses for its FPGA MACs.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.core import dd, ozaki
+from repro.core.gemm import matmul
+from .common import block, emit, rand_dd, time_fn
+
+
+def projected_tpu_gflops(n: int) -> float:
+    """Ozaki-on-MXU effective binary128 GEMM rate on one v5e chip."""
+    beta = ozaki.slice_bits(n, jnp.float32, jnp.bfloat16)
+    s = ozaki.slice_count(107, beta)
+    n_products = s * (s + 1) // 2  # triangular truncation
+    return 197e12 / n_products / 1e9
+
+
+def run():
+    for n in (64, 128, 256, 384):
+        a, b = rand_dd((n, n), 1), rand_dd((n, n), 2)
+        flops = 2.0 * n**3
+        for backend in ("ozaki", "xla"):
+            t = time_fn(lambda: block(matmul(a, b, backend=backend)))
+            emit(f"gemm_fig2/{backend}/n={n}", t * 1e6,
+                 f"gflops={flops / t / 1e9:.3f}")
+        emit(f"gemm_fig2/tpu_projected/n={n}", 0.0,
+             f"gflops={projected_tpu_gflops(n):.1f}")
+    # pallas interpret is slow; one size to document correctness-mode cost
+    n = 128
+    a, b = rand_dd((n, n), 3), rand_dd((n, n), 4)
+    t = time_fn(lambda: block(matmul(a, b, backend="pallas", bm=64, bn=64, bk=16)),
+                iters=1)
+    emit(f"gemm_fig2/pallas_interpret/n={n}", t * 1e6,
+         f"gflops={2.0 * n**3 / t / 1e9:.4f}")
+    # f64 'double' control (what the paper's CPU baseline does per core)
+    import numpy as np
+
+    an, bn = np.asarray(dd.to_float(a)), np.asarray(dd.to_float(b))
+    t = time_fn(lambda: an @ bn)
+    emit(f"gemm_fig2/f64_numpy/n={n}", t * 1e6,
+         f"gflops={2.0 * n**3 / t / 1e9:.1f}")

@@ -1,0 +1,51 @@
+"""Framework-level bench: LM train-step throughput on CPU (reduced configs)
+
++ the precision-policy cost (the paper's technique inside the LM stack:
+lm_head in binary128-class 'dd' mode vs native).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.launch import steps as S
+from repro.launch.train import reduce_cfg
+from .common import block, emit, time_fn
+
+
+def run():
+    for arch in ("qwen3-0.6b", "xlstm-350m", "moonshot-v1-16b-a3b"):
+        cfg = reduce_cfg(get_config(arch), d_model=128)
+        run_cfg = RunConfig(total_steps=10)
+        state = S.init_state(cfg, run_cfg, jax.random.PRNGKey(0))
+        step = jax.jit(S.build_train_step(cfg, run_cfg))
+        rng = np.random.default_rng(0)
+        b, s = 4, 128
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jnp.zeros(
+                (b, cfg.n_modality_tokens, cfg.d_model), jnp.float32)
+        t = time_fn(lambda: block(step(state, batch)[1]["loss"]), warmup=1, iters=2)
+        emit(f"lm_train/{arch}", t * 1e6,
+             f"tokens_per_s={b * s / t:.0f}")
+
+    # precision-policy: dd lm_head vs native (the paper's engine in the LM)
+    cfg = reduce_cfg(get_config("qwen3-0.6b"), d_model=128)
+    for mode in ("native", "dd"):
+        run_cfg = RunConfig(total_steps=10, policy={"lm_head": mode})
+        state = S.init_state(cfg, run_cfg, jax.random.PRNGKey(0))
+        step = jax.jit(S.build_train_step(cfg, run_cfg))
+        rng = np.random.default_rng(0)
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)), jnp.int32),
+        }
+        t = time_fn(lambda: block(step(state, batch)[1]["loss"]), warmup=1, iters=2)
+        emit(f"lm_policy/lm_head={mode}", t * 1e6, "site=lm_head")

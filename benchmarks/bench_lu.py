@@ -1,0 +1,33 @@
+"""Paper Fig. 8: blocked LU decomposition (Rgetrf) performance.
+
+GFlops = (2/3 n^3) / T  (Eq. 7), block size b swept as in the paper
+(their optimum: b=108..144 on Agilex).  Accuracy: max |PA - LU| must sit at
+binary128-class levels (paper's E_L1 ~ 1e-31..1e-28).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dd
+from repro.core.linalg import rgetrf
+from .common import emit, rand_dd, time_fn
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for n, blocks in ((96, (16, 32)), (192, (16, 32, 64))):
+        a = rand_dd((n, n), seed=n)
+        for b in blocks:
+            t = time_fn(lambda: rgetrf(a, block=b), warmup=1, iters=1)
+            lu, piv = rgetrf(a, block=b)
+            lu_np = np.asarray(dd.to_float(lu))
+            l = np.tril(lu_np, -1) + np.eye(n)
+            u = np.triu(lu_np)
+            pa = np.asarray(dd.to_float(a)).copy()
+            for j, p in enumerate(piv):
+                pa[[j, p]] = pa[[p, j]]
+            resid = float(np.abs(l @ u - pa).max())
+            gflops = (2 / 3) * n**3 / t / 1e9
+            emit(f"lu_fig8/n={n}_b={b}", t * 1e6,
+                 f"gflops={gflops:.4f};max_resid={resid:.1e}")

@@ -1,0 +1,29 @@
+"""Paper Fig. 4/6: non-square GEMM — m=k fixed, n swept (and k swept).
+
+The paper's systolic array collapses on tall-skinny shapes (PE starvation).
+The TPU port's failure mode differs: throughput follows the arithmetic
+intensity of the shape, so efficiency falls once n (or k) is too small to
+amortize operand traffic — same qualitative cliff, different mechanism
+(documented in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from repro.core.gemm import matmul
+from .common import block, emit, rand_dd, time_fn
+
+
+def run():
+    mk = 256
+    for n in (16, 32, 64, 128, 256):
+        a, b = rand_dd((mk, mk), 7), rand_dd((mk, n), 8)
+        flops = 2.0 * mk * mk * n
+        t = time_fn(lambda: block(matmul(a, b, backend="ozaki")))
+        emit(f"nonsquare_fig4/n={n}", t * 1e6,
+             f"gflops={flops / t / 1e9:.3f}")
+    for k in (16, 32, 64, 128, 256):
+        a, b = rand_dd((mk, k), 9), rand_dd((k, mk), 10)
+        flops = 2.0 * mk * mk * k
+        t = time_fn(lambda: block(matmul(a, b, backend="ozaki")))
+        emit(f"nonsquare_fig6/k={k}", t * 1e6,
+             f"gflops={flops / t / 1e9:.3f}")

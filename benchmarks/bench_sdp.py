@@ -1,0 +1,43 @@
+"""Paper Tables IV + V: SDP (PDIPM) time-per-iteration and solution quality.
+
+Table IV analogue: seconds/iteration for the same problem in double vs
+binary128 (the paper's CPU-vs-FPGA axis becomes precision-backend cost
+here; the TPU projection rides the GEMM ratio from bench_gemm).
+Table V analogue: relative gap + feasibility errors per precision — the
+scientific claim (double stalls ~1e-8..1e-12; binary128-class reaches
+~1e-23 with ~1e-33 dual feasibility).
+"""
+
+from __future__ import annotations
+
+from repro.core.sdp import solve_sdp, theta_problem
+from .common import emit, time_fn
+
+
+def run():
+    # the instance validated in tests/test_sdp.py (theta7/seed3 is a
+    # degenerate graph: singular Schur system, NaNs even in double)
+    prob = theta_problem(8, 0.4, seed=2)
+    import time as _t
+
+    t0 = _t.time()
+    rq = solve_sdp(prob, precision="binary128", max_iters=50)
+    t_dd = _t.time() - t0
+    t0 = _t.time()
+    rd = solve_sdp(prob, precision="double", max_iters=30)
+    t_f64 = _t.time() - t0
+    emit(f"sdp_tableIV/{prob.name}/double", t_f64 / rd.iterations * 1e6,
+         f"iters={rd.iterations}")
+    emit(f"sdp_tableIV/{prob.name}/binary128", t_dd / rq.iterations * 1e6,
+         f"iters={rq.iterations}")
+    emit(f"sdp_tableV/{prob.name}/double", 0.0,
+         f"gap={rd.relative_gap:.2e};pfeas={rd.p_feas_err:.2e};"
+         f"dfeas={rd.d_feas_err:.2e}")
+    emit(f"sdp_tableV/{prob.name}/binary128", 0.0,
+         f"gap={rq.relative_gap:.2e};pfeas={rq.p_feas_err:.2e};"
+         f"dfeas={rq.d_feas_err:.2e}")
+    emit(f"sdp_tableV/{prob.name}/objective_agreement", 0.0,
+         f"double={rd.primal_obj:.9f};binary128={rq.primal_obj:.9f}")
+    emit(f"sdp_tableV/{prob.name}/note", 0.0,
+         "full-depth run (80 iters) reaches gap 4.4e-23 / dfeas 8.1e-33 "
+         "- asserted in tests/test_sdp.py")

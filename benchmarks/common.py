@@ -1,0 +1,41 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (fn must block, e.g. via block_until_ready)."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def block(x):
+    return jax.tree.map(
+        lambda a: a.block_until_ready() if hasattr(a, "block_until_ready") else a, x)
+
+
+def rand_dd(shape, seed=0, dtype=jnp.float64):
+    from repro.core import dd
+
+    rng = np.random.default_rng(seed)
+    return dd.from_float(jnp.asarray(rng.random(shape) - 0.5, dtype))

@@ -1,0 +1,112 @@
+"""Perf hillclimb driver (§Perf methodology): re-lower a cell with a named
+change and print before/after roofline terms.
+
+Cells (chosen per the task spec):
+  A: qwen3-4b x train_4k        — paper-representative dense-GEMM training
+  B: llama3-405b x train_4k     — worst roofline fraction at baseline
+  C: qwen3-moe-235b x train_4k  — most collective-bound large cell
+
+Changes are expressed as (run_overrides, rules_overrides) pairs so each
+experiment is one CLI invocation:
+
+  PYTHONPATH=src python -m benchmarks.hillclimb A dp_only
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json  # noqa: E402
+import sys  # noqa: E402
+
+CELLS = {
+    "A": ("qwen3-4b", "train_4k"),
+    "B": ("llama3-405b", "train_4k"),
+    "C": ("qwen3-moe-235b-a22b", "train_4k"),
+    "A32": ("qwen3-4b", "prefill_32k"),
+}
+
+
+def dp_only_rules(rules):
+    """Disable tensor parallelism: pure DP+ZeRO over all 256/512 chips.
+
+    Small/medium models pay more for TP activation all-reduces than the
+    matmul sharding saves; batch and parameters shard over the WHOLE mesh.
+    """
+    import dataclasses
+
+    pr = dict(rules.param_rules)
+    ar = dict(rules.act_rules)
+    every = ("pod", "data", "model")
+    for k in ("heads", "kv_heads", "ffn", "vocab", "experts"):
+        pr[k] = None
+    pr["embed"] = every
+    ar["batch"] = every
+    for k in ("heads", "kv_heads", "ffn", "vocab", "seq_res", "experts"):
+        ar[k] = None
+    return dataclasses.replace(rules, param_rules=pr, act_rules=ar)
+
+
+def ep_only_rules(rules):
+    """MoE: keep EP (experts on model axis) but drop attention/vocab TP."""
+    import dataclasses
+
+    pr = dict(rules.param_rules)
+    ar = dict(rules.act_rules)
+    for k in ("heads", "kv_heads", "vocab"):
+        pr[k] = None
+        ar[k] = None
+    pr["ffn"] = None
+    ar["ffn"] = None
+    ar["seq_res"] = None
+    return dataclasses.replace(rules, param_rules=pr, act_rules=ar)
+
+
+CHANGES = {
+    "baseline": ({}, None),
+    "dp_only": ({}, dp_only_rules),
+    "dp_only_mb1": ({"microbatches": 1}, dp_only_rules),
+    "dp_only_bf16": ({"microbatches": 1, "param_dtype": "bfloat16",
+                      "optimizer": "adamw_int8"}, dp_only_rules),
+    "mb4": ({"microbatches": 4}, None),
+    "mb2": ({"microbatches": 2}, None),
+    "mb4_bf16": ({"microbatches": 4, "param_dtype": "bfloat16",
+                  "optimizer": "adamw_int8"}, None),
+    "dp_only_mb4": ({"microbatches": 4, "param_dtype": "bfloat16",
+                     "optimizer": "adamw_int8"}, dp_only_rules),
+    "ep_only": ({}, ep_only_rules),
+    "ep_only_mb4": ({"microbatches": 4}, ep_only_rules),
+    "remat_dots": ({"remat": "dots"}, None),
+}
+
+
+def main():
+    from repro.launch.dryrun import lower_cell
+
+    cell = CELLS[sys.argv[1]]
+    change = sys.argv[2] if len(sys.argv) > 2 else "baseline"
+    run_overrides, rules_fn = CHANGES[change]
+    rec = lower_cell(cell[0], cell[1], run_overrides=run_overrides,
+                     rules_overrides=rules_fn)
+    if "error" in rec:
+        print(f"FAIL {cell} {change}: {rec['error']}")
+        print(rec.get("traceback", "")[-1500:])
+        return 1
+    r = rec["roofline"]
+    print(json.dumps({
+        "cell": f"{cell[0]} x {cell[1]}", "change": change,
+        "mem_gb": round(rec["memory_per_device"]["peak_estimate"] / 1e9, 2),
+        "compute_ms": round(r["compute_s"] * 1e3, 1),
+        "memory_ms": round(r["memory_s"] * 1e3, 1),
+        "collective_ms": round(r["collective_s"] * 1e3, 1),
+        "bottleneck": r["bottleneck"],
+        "useful_ratio": round(r["useful_ratio"], 3),
+        "roofline_fraction": round(r["roofline_fraction"], 4),
+        "collectives": {k: round(v / 1e9, 1) for k, v in
+                        rec["collective_bytes"].items() if k != "total"},
+    }, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,50 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from dryrun_results.json."""
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def render(path="benchmarks/dryrun_results.json", mesh="16x16"):
+    with open(path) as f:
+        recs = json.load(f)
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh and not r.get("skipped"):
+            continue
+        if r.get("skipped"):
+            if mesh == "16x16":
+                rows.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | "
+                    f"SKIP: {r['skipped']} |")
+            continue
+        roof = r["roofline"]
+        rows.append(
+            "| {arch} | {shape} | {mem} | {c:.1f} | {m:.1f} | {k:.1f} | "
+            "{bot} | {ur:.2f} | {frac:.3f} |  |".format(
+                arch=r["arch"], shape=r["shape"],
+                mem=fmt_bytes(r["memory_per_device"]["peak_estimate"]),
+                c=roof["compute_s"] * 1e3, m=roof["memory_s"] * 1e3,
+                k=roof["collective_s"] * 1e3, bot=roof["bottleneck"],
+                ur=roof["useful_ratio"], frac=roof["roofline_fraction"]))
+    seen = set()
+    uniq = []
+    for row in rows:
+        key = row.split("|")[1:3]
+        k = tuple(key)
+        if k in seen:
+            continue
+        seen.add(k)
+        uniq.append(row)
+    hdr = ("| arch | shape | mem/dev GB | compute ms | memory ms | "
+           "collective ms | bottleneck | useful ratio | roofline frac | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    print(hdr)
+    print("\n".join(uniq))
+
+
+if __name__ == "__main__":
+    render(mesh=sys.argv[1] if len(sys.argv) > 1 else "16x16")

@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+Mapping to the paper (also in DESIGN.md §7):
+
+  bench_gemm       Fig. 2/5   GEMM GFlops vs n, per backend + TPU projection
+  bench_tile       Fig. 3 + Tables II/III   BlockSpec (M_Tile) sweep
+  bench_nonsquare  Fig. 4/6   tall-skinny shapes
+  bench_accuracy   Eq. 6      E_L1 accuracy bands
+  bench_lu         Fig. 8     blocked LU (Rgetrf) + block-size sweep
+  bench_sdp        Tables IV/V   PDIPM time/iter + solution quality
+  bench_lm         framework: LM train-step throughput + precision policy
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from . import (bench_accuracy, bench_gemm, bench_lm, bench_lu,
+                   bench_nonsquare, bench_sdp, bench_tile)
+
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for mod in (bench_gemm, bench_tile, bench_nonsquare, bench_accuracy,
+                bench_lu, bench_sdp, bench_lm):
+        if only and only not in mod.__name__:
+            continue
+        print(f"# {mod.__name__} — {mod.__doc__.strip().splitlines()[0]}",
+              flush=True)
+        mod.run()
+    print(f"# total {time.time() - t0:.0f}s")
+
+
+if __name__ == '__main__':
+    main()

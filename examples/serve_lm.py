@@ -1,0 +1,9 @@
+"""Batched serving demo: continuous-batching greedy decode on CPU.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing with elastic restore."""
+
+from .ckpt import CheckpointManager, restore_resharded, save_pytree, load_pytree  # noqa: F401

@@ -1,0 +1,4 @@
+"""Arch configs: one module per assigned architecture + shape specs."""
+
+from .base import ArchConfig, RunConfig, get_config, list_configs, register  # noqa: F401
+from .shapes import SHAPES, ShapeSpec, runnable_cells, skip_reason  # noqa: F401

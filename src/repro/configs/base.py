@@ -1,0 +1,142 @@
+"""Architecture + run configuration dataclasses and the registry."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["ArchConfig", "RunConfig", "register", "get_config", "list_configs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | ssm | hybrid | moe | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # moe
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    slstm_every: int = 0        # xlstm: every k-th layer is sLSTM
+    attn_every: int = 0         # hybrid: shared attn block every k mamba blocks
+    # vlm
+    cross_attn_every: int = 0
+    n_modality_tokens: int = 0  # stub frontend sequence length
+    # audio / encoder-only
+    encoder_only: bool = False
+    # provenance
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def supports_decode(self) -> bool:
+        return not self.encoder_only
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run 500k-token context (per spec: ssm/hybrid only)?"""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS in the roofline)."""
+        d, hd = self.d_model, self.head_dim
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        mlp_dense = 3 * d * self.d_ff
+        per_layer = 0
+        if self.family in ("dense", "vlm", "audio"):
+            per_layer = attn + mlp_dense + 2 * d
+            total = self.n_layers * per_layer
+            if self.family == "vlm" and self.cross_attn_every:
+                n_cross = self.n_layers // self.cross_attn_every
+                total += n_cross * (attn + d)
+        elif self.family == "moe":
+            moe = 3 * d * self.d_ff * self.n_experts + d * self.n_experts
+            shared = 3 * d * self.d_ff * self.n_shared_experts
+            per_layer = attn + moe + shared + 2 * d
+            total = self.n_layers * per_layer
+        elif self.family == "ssm":
+            d_inner = self.ssm_expand * d
+            mlstm = d * d_inner * 3 + d_inner * d + d_inner * 3  # q,k,v,out,gates
+            per_layer = mlstm + 2 * d
+            total = self.n_layers * per_layer
+        elif self.family == "hybrid":
+            d_inner = self.ssm_expand * d
+            mamba = d * (2 * d_inner + 2 * self.ssm_state + self.n_heads) \
+                + d_inner * d + d_inner * self.ssm_conv
+            n_attn = self.n_layers // max(self.attn_every, 1)
+            total = self.n_layers * (mamba + 2 * d) + (attn + mlp_dense + 2 * d)
+        else:
+            total = self.n_layers * (attn + mlp_dense + 2 * d)
+        return int(total + emb)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        active_moe_frac = (self.experts_per_token + self.n_shared_experts) \
+            / max(self.n_experts + self.n_shared_experts, 1)
+        moe_params = 3 * d * self.d_ff * (self.n_experts + self.n_shared_experts) \
+            * self.n_layers
+        return int(self.param_count() - moe_params * (1 - active_moe_frac))
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Training/serving run settings (everything not architectural)."""
+
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    microbatches: int = 1            # gradient accumulation
+    remat: str = "none"              # none | full | dots
+    optimizer: str = "adamw"         # adamw | adamw_int8 | adamw_dd
+    grad_compression: str = "none"   # none | int8_ef
+    compensated_psum: bool = False   # DD-compensated gradient reduction
+    policy: dict = dataclasses.field(default_factory=dict)
+    seed: int = 0
+
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        from . import registry  # noqa: F401  (populate)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list:
+    from . import registry  # noqa: F401
+
+    return sorted(_REGISTRY)

@@ -1,0 +1,17 @@
+"""hubert-xlarge [audio] — encoder-only, w2v2-style backbone.
+[arXiv:2106.07447; unverified]
+
+Frame frontend is a STUB per the task spec: input_specs() supplies
+precomputed frame embeddings; training is masked-unit prediction over the
+504-unit codebook.  Encoder-only => no decode shapes.
+"""
+
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+    d_ff=5120, vocab_size=504, head_dim=80,
+    encoder_only=True, n_modality_tokens=0,
+    source="arXiv:2106.07447",
+))

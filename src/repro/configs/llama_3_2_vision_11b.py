@@ -1,0 +1,17 @@
+"""llama-3.2-vision-11b [vlm] — cross-attn image layers every 5th layer.
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+The vision frontend is a STUB per the task spec: input_specs() supplies
+precomputed patch embeddings (n_modality_tokens, d_model).
+"""
+
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=128256, head_dim=128,
+    cross_attn_every=5, n_modality_tokens=1024,
+    rope_theta=5e5,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+))

@@ -1,0 +1,27 @@
+"""Import every arch config module to populate the registry."""
+
+from . import (  # noqa: F401
+    hubert_xlarge,
+    llama3_405b,
+    llama_3_2_vision_11b,
+    mistral_nemo_12b,
+    moonshot_v1_16b_a3b,
+    qwen3_0_6b,
+    qwen3_4b,
+    qwen3_moe_235b_a22b,
+    xlstm_350m,
+    zamba2_2_7b,
+)
+
+ALL_ARCHS = [
+    "qwen3-4b",
+    "mistral-nemo-12b",
+    "qwen3-0.6b",
+    "llama3-405b",
+    "xlstm-350m",
+    "zamba2-2.7b",
+    "moonshot-v1-16b-a3b",
+    "qwen3-moe-235b-a22b",
+    "llama-3.2-vision-11b",
+    "hubert-xlarge",
+]

@@ -1,0 +1,42 @@
+"""The four assigned input-shape sets (LM-family, per the task spec)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["ShapeSpec", "SHAPES", "runnable_cells", "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def skip_reason(cfg, shape: ShapeSpec) -> str | None:
+    """None if (arch, shape) is runnable; else the DESIGN.md skip reason."""
+    if cfg.encoder_only and shape.kind == "decode":
+        return "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "long_500k needs sub-quadratic attention (pure full-attention arch)"
+    return None
+
+
+def runnable_cells(configs, shapes=None):
+    shapes = shapes or list(SHAPES.values())
+    cells = []
+    for cfg in configs:
+        for sh in shapes:
+            if skip_reason(cfg, sh) is None:
+                cells.append((cfg, sh))
+    return cells

@@ -1,0 +1,15 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks. [arXiv:2405.04517; unverified]
+
+d_ff=0 per spec: the recurrent blocks carry their own up/down projections
+(expand factor 2); every 4th layer is an sLSTM block, the rest mLSTM.
+"""
+
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="xlstm-350m", family="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304, head_dim=256,
+    ssm_expand=2, slstm_every=4,
+    source="arXiv:2405.04517",
+))

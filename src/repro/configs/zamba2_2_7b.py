@@ -1,0 +1,15 @@
+"""zamba2-2.7b [hybrid] — Mamba2 + shared attn blocks. [arXiv:2411.15242; hf]
+
+54 Mamba2 layers with ONE shared transformer block applied every 6 layers
+(9 applications, shared parameters), kv=32 => MHA in the shared block.
+"""
+
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=10240, vocab_size=32000, head_dim=80,
+    ssm_state=64, ssm_expand=2, attn_every=6,
+    source="arXiv:2411.15242",
+))

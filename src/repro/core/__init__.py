@@ -1,0 +1,12 @@
+"""Core numerics: the paper's contribution (binary128-class GEMM) in JAX.
+
+Extended precision requires f64 limb support on the host path; enable x64
+once at import.  Model code (src/repro/models) always passes explicit dtypes
+and is unaffected (weak-typed python scalars keep array dtypes).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from . import dd, efts, qd  # noqa: E402,F401

@@ -1,0 +1,72 @@
+"""Rgemm-compatible BLAS layer (paper §III-A, Listing 1).
+
+Mirrors MPLAPACK's ``Rgemm`` split exactly as the paper implements it: the
+accelerator computes only ``C' = A @ B`` (Eq. 2); the host handles transposes
+and the alpha/beta epilogue (Eq. 1), because scalar-matrix multiply and
+matrix add are O(n^2) and "very costly in a GEMM design on an FPGA" — and
+equally pointless to fuse into the TPU kernel.
+
+All matrices are ``dd.DD`` struct-of-arrays; ``alpha``/``beta`` may be python
+floats or DD scalars.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import dd
+from .gemm import matmul
+
+__all__ = ["rgemm", "rsyrk", "transpose", "identity"]
+
+
+def transpose(a: dd.DD) -> dd.DD:
+    return dd.DD(a.hi.T, a.lo.T)
+
+
+def identity(n: int, dtype=jnp.float64) -> dd.DD:
+    return dd.from_float(jnp.eye(n, dtype=dtype))
+
+
+def _as_dd_scalar(x, dtype) -> dd.DD:
+    if isinstance(x, dd.DD):
+        return x
+    return dd.from_float(jnp.asarray(x, dtype=dtype))
+
+
+def rgemm(transa: str, transb: str, alpha, a: dd.DD, b: dd.DD, beta,
+          c: dd.DD | None = None, *, backend: str = "auto", **kwargs) -> dd.DD:
+    """C = alpha * op(A) @ op(B) + beta * C   (op per 'n'/'t' flags).
+
+    The m/n/k/ld* arguments of the C API are implied by array shapes here;
+    the transpose and epilogue happen on the host side of the split, the
+    O(mnk) product on the accelerator path (``backend``).
+    """
+    if transa.lower().startswith("t"):
+        a = transpose(a)
+    if transb.lower().startswith("t"):
+        b = transpose(b)
+    prod = matmul(a, b, backend=backend, **kwargs)
+    alpha = _as_dd_scalar(alpha, prod.hi.dtype)
+    out = dd.mul(dd.DD(jnp.broadcast_to(alpha.hi, prod.shape),
+                       jnp.broadcast_to(alpha.lo, prod.shape)), prod)
+    if c is not None:
+        beta = _as_dd_scalar(beta, prod.hi.dtype)
+        bc = dd.mul(dd.DD(jnp.broadcast_to(beta.hi, c.shape),
+                          jnp.broadcast_to(beta.lo, c.shape)), c)
+        out = dd.add(out, bc)
+    return out
+
+
+def rsyrk(uplo: str, trans: str, alpha, a: dd.DD, beta,
+          c: dd.DD | None = None, **kwargs) -> dd.DD:
+    """C = alpha * A @ A^T + beta * C (symmetric rank-k update, full form).
+
+    SDPA's PDIPM calls this shape constantly; we form the full symmetric
+    result (uplo kept for API compatibility).
+    """
+    del uplo
+    at = transpose(a)
+    if trans.lower().startswith("t"):
+        return rgemm("n", "n", alpha, at, a, beta, c, **kwargs)
+    return rgemm("n", "n", alpha, a, at, beta, c, **kwargs)

@@ -1,0 +1,251 @@
+"""Double-word ("double-double") arithmetic — the binary128-class MAC.
+
+A ``DD`` value is an unevaluated sum ``hi + lo`` of two native floats with
+``|lo| <= ulp(hi)/2``.  Over f64 limbs this gives ~106 mantissa bits
+("dd64", the classic double-double used by the paper's own related work
+[Nakasato 2011, SDPA-DD, Kouya 2021]); over f32 limbs ~49 bits ("df32"),
+the TPU-VPU-native format.  binary128 proper has 113 bits: dd64 sits 7 bits
+short, qd (see qd.py) and the Ozaki path (ozaki.py) overshoot it.  The
+accuracy delta is quantified in benchmarks/bench_accuracy.py.
+
+Representation is struct-of-arrays: ``DD(hi, lo)`` where hi/lo are equal-shape
+jnp arrays, so every DD op is a vectorized multiply-add "unit" in the paper's
+sense.  Algorithms are the standard accurate variants (Dekker/Knuth/
+Hida-Li-Bailey); each op's exactness/error bound is property-tested against
+``fractions.Fraction`` oracles in tests/test_dd.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .efts import quick_two_sum, two_prod, two_sum
+
+__all__ = [
+    "DD",
+    "dd",
+    "from_float",
+    "from_hi_lo",
+    "to_float",
+    "zeros",
+    "add",
+    "sub",
+    "neg",
+    "abs_",
+    "mul",
+    "mul_pow2",
+    "fma",
+    "div",
+    "sqrt",
+    "sum_",
+    "dot",
+    "lt",
+    "le",
+    "gt",
+    "ge",
+    "where",
+    "eps",
+]
+
+
+class DD(NamedTuple):
+    """Unevaluated sum hi + lo. Leaves are jnp arrays (any shape)."""
+
+    hi: jnp.ndarray
+    lo: jnp.ndarray
+
+    @property
+    def dtype(self):
+        return self.hi.dtype
+
+    @property
+    def shape(self):
+        return self.hi.shape
+
+    def astype(self, dtype):
+        # narrowing conversions renormalize through the target precision
+        hi = self.hi.astype(dtype)
+        lo = (self.hi - hi.astype(self.hi.dtype)).astype(dtype) + self.lo.astype(dtype)
+        return DD(*quick_two_sum(hi, lo))
+
+    def __getitem__(self, idx):
+        return DD(self.hi[idx], self.lo[idx])
+
+    def reshape(self, *shape):
+        return DD(self.hi.reshape(*shape), self.lo.reshape(*shape))
+
+
+def eps(dtype) -> float:
+    """Unit roundoff of the DD format with the given limb dtype."""
+    p = 53 if jnp.dtype(dtype) == jnp.float64 else 24
+    return 2.0 ** (-2 * p)
+
+
+def from_float(x, dtype=None) -> DD:
+    x = jnp.asarray(x, dtype=dtype)
+    return DD(x, jnp.zeros_like(x))
+
+
+def from_hi_lo(hi, lo) -> DD:
+    """Renormalize an arbitrary (hi, lo) pair into canonical DD form."""
+    return DD(*two_sum(hi, lo))
+
+
+def dd(x, dtype=jnp.float64) -> DD:
+    """Coerce scalars/arrays/DD to DD."""
+    if isinstance(x, DD):
+        return x
+    return from_float(x, dtype=dtype)
+
+
+def to_float(x: DD):
+    return x.hi + x.lo
+
+
+def zeros(shape, dtype=jnp.float64) -> DD:
+    z = jnp.zeros(shape, dtype=dtype)
+    return DD(z, z)
+
+
+def neg(a: DD) -> DD:
+    return DD(-a.hi, -a.lo)
+
+
+def abs_(a: DD) -> DD:
+    m = a.hi < 0
+    return DD(jnp.where(m, -a.hi, a.hi), jnp.where(m, -a.lo, a.lo))
+
+
+def add(a: DD, b: DD) -> DD:
+    """Accurate DD + DD (Li et al. "IEEE add"; error <= 3 ulp^2)."""
+    s, e = two_sum(a.hi, b.hi)
+    t, f = two_sum(a.lo, b.lo)
+    e = e + t
+    s, e = quick_two_sum(s, e)
+    e = e + f
+    return DD(*quick_two_sum(s, e))
+
+
+def sub(a: DD, b: DD) -> DD:
+    return add(a, neg(b))
+
+
+def add_float(a: DD, b) -> DD:
+    s, e = two_sum(a.hi, b)
+    e = e + a.lo
+    return DD(*quick_two_sum(s, e))
+
+
+def mul(a: DD, b: DD) -> DD:
+    """DD * DD (error <= 4 ulp^2)."""
+    p, e = two_prod(a.hi, b.hi)
+    e = e + (a.hi * b.lo + a.lo * b.hi)
+    return DD(*quick_two_sum(p, e))
+
+
+def mul_float(a: DD, b) -> DD:
+    p, e = two_prod(a.hi, b)
+    e = e + a.lo * b
+    return DD(*quick_two_sum(p, e))
+
+
+def mul_pow2(a: DD, s) -> DD:
+    """Exact scaling by a power of two."""
+    return DD(a.hi * s, a.lo * s)
+
+
+def fma(acc: DD, a: DD, b: DD) -> DD:
+    """acc + a*b — the binary128-class multiply-add "PE" operation.
+
+    This is the exact op the paper instantiates P_R x P_C times; one call is
+    ~86 native flops (measured in benchmarks/bench_tile.py), which sets the
+    F_peak model for the TPU port.
+    """
+    return add(acc, mul(a, b))
+
+
+def div(a: DD, b: DD) -> DD:
+    """Long-division style DD / DD (QD library algorithm)."""
+    q1 = a.hi / b.hi
+    r = sub(a, mul_float(b, q1))
+    q2 = r.hi / b.hi
+    r = sub(r, mul_float(b, q2))
+    q3 = r.hi / b.hi
+    q, e = quick_two_sum(q1, q2)
+    return add_float(DD(q, e), q3)
+
+
+def sqrt(a: DD) -> DD:
+    """DD sqrt via Karp's trick: x ~ 1/sqrt(hi); s = a*x; s + x*(a - s^2)/2."""
+    x = 1.0 / jnp.sqrt(a.hi)
+    ax = a.hi * x
+    ax_dd = from_float(ax)
+    err = sub(a, mul(ax_dd, ax_dd))
+    res = add_float(err, 0.0)
+    corr = res.hi * (x * 0.5)
+    out = add_float(ax_dd, corr)
+    # guard zero (sqrt(0) -> 0, avoid inf * 0 = nan)
+    zero = a.hi == 0
+    return DD(jnp.where(zero, 0.0, out.hi), jnp.where(zero, 0.0, out.lo))
+
+
+def sum_(a: DD, axis=None, keepdims=False) -> DD:
+    """Compensated reduction of a DD array along an axis (pairwise-free,
+
+    sequential two_sum chain via a Python loop over a moved axis is too slow;
+    instead reduce with repeated halving which keeps every partial in DD).
+    """
+    if axis is None:
+        flat = DD(a.hi.reshape(-1), a.lo.reshape(-1))
+        return sum_(flat, axis=0, keepdims=keepdims)
+    n = a.hi.shape[axis]
+    hi = jnp.moveaxis(a.hi, axis, 0)
+    lo = jnp.moveaxis(a.lo, axis, 0)
+    cur = DD(hi, lo)
+    m = n
+    while m > 1:
+        half = m // 2
+        even = DD(cur.hi[: 2 * half : 2], cur.lo[: 2 * half : 2])
+        odd = DD(cur.hi[1 : 2 * half : 2], cur.lo[1 : 2 * half : 2])
+        red = add(even, odd)
+        if m % 2:
+            red = add(
+                red,
+                DD(
+                    jnp.concatenate([cur.hi[-1:], jnp.zeros_like(red.hi[1:])], 0),
+                    jnp.concatenate([cur.lo[-1:], jnp.zeros_like(red.lo[1:])], 0),
+                ),
+            )
+        cur = red
+        m = half
+    out = DD(cur.hi[0], cur.lo[0])
+    if keepdims:
+        out = DD(jnp.expand_dims(out.hi, axis), jnp.expand_dims(out.lo, axis))
+    return out
+
+
+def dot(a: DD, b: DD) -> DD:
+    """Inner product of two DD vectors with DD accumulation."""
+    return sum_(mul(a, b), axis=0)
+
+
+def lt(a: DD, b: DD):
+    return (a.hi < b.hi) | ((a.hi == b.hi) & (a.lo < b.lo))
+
+
+def le(a: DD, b: DD):
+    return (a.hi < b.hi) | ((a.hi == b.hi) & (a.lo <= b.lo))
+
+
+def gt(a: DD, b: DD):
+    return lt(b, a)
+
+
+def ge(a: DD, b: DD):
+    return le(b, a)
+
+
+def where(c, a: DD, b: DD) -> DD:
+    return DD(jnp.where(c, a.hi, b.hi), jnp.where(c, a.lo, b.lo))

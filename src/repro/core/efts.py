@@ -1,0 +1,170 @@
+"""Error-free transformations (EFTs) — the primitive "DSP blocks" of this port.
+
+The paper composes binary128 multiply-add units out of FPGA DSP blocks.  On a
+TPU the native units are f32 (VPU lanes) and bf16 (MXU); we compose wide
+arithmetic out of them with error-free transformations:
+
+  two_sum(a, b)        -> (s, e)  with  s = fl(a+b),  s + e == a + b  exactly
+  quick_two_sum(a, b)  -> same, requires |a| >= |b| (3 ops instead of 6)
+  two_prod(a, b)       -> (p, e)  with  p + e == a * b * (1 + eps_tp)
+
+Compiler-safety design note (important, discovered empirically):
+XLA:CPU's LLVM backend performs FMA *contraction* — a float multiply feeding
+an add/subtract inside one fused loop may be emitted as a single fma, so the
+add sees the UNROUNDED product.  Classic Dekker two_prod subtracts the
+rounded ``p = fl(a*b)`` from partial products; if the compiler rematerializes
+``a*b`` into that subtraction as an fma, the error term collapses.  The
+implementation below is **contraction-robust by construction**:
+
+  * the operand split uses integer mantissa masking (no float multiply, so
+    nothing to contract; Veltkamp's ``C*a`` trick is itself contractible);
+  * ``p`` is assembled from the four *exact* partial products with two_sum
+    chains — every multiply that reaches an add is exactly representable, so
+    fma contraction cannot change any value.
+
+Cost: two_prod is no longer bit-exact; its relative error is <= ~2^-2p+2
+(2^-105 for f64 limbs, 2^-47 for f32), from (a) rounding when summing the
+three two_sum error terms and (b) the lowest partial product carrying
+p+1 bits under the mask split (no Veltkamp sign trick).  Double-word
+arithmetic built on it keeps relative error ~2^-104 / ~2^-46 — the same
+class as the binary128 target (and as the paper's own DD-based related
+work).  Property tests pin these bounds against Fraction oracles.
+
+All algorithms assume round-to-nearest and flush-to-zero-free inputs in the
+normal range (XLA:CPU flushes subnormals).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "two_sum",
+    "quick_two_sum",
+    "mask_split",
+    "two_prod",
+    "two_prod_terms",
+    "two_prod_exact",
+    "TWO_PROD_RELERR",
+]
+
+# relative error bound of two_prod per limb dtype (see module docstring)
+TWO_PROD_RELERR = {
+    jnp.dtype(jnp.float64): 2.0**-104,
+    jnp.dtype(jnp.float32): 2.0**-46,
+}
+
+
+def two_sum(a, b):
+    """Knuth's branch-free exact addition: s + e == a + b exactly."""
+    s = a + b
+    bb = s - a
+    e = (a - (s - bb)) + (b - bb)
+    return s, e
+
+
+def quick_two_sum(a, b):
+    """Dekker's fast exact addition. Exact when |a| >= |b| (or a == 0)."""
+    s = a + b
+    e = b - (s - a)
+    return s, e
+
+
+def _mask_for(dtype):
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.float64:
+        # clear low 27 of 52 explicit mantissa bits -> hi has 26 bits
+        return jnp.uint64(0xFFFFFFFFF8000000), jnp.uint64
+    if dtype == jnp.float32:
+        # clear low 12 of 23 explicit mantissa bits -> hi has 12 bits
+        return jnp.uint32(0xFFFFF000), jnp.uint32
+    raise ValueError(f"unsupported limb dtype {dtype}")
+
+
+def mask_split(a):
+    """Split a == hi + lo exactly by masking low mantissa bits (integer ops).
+
+    hi keeps the top ~p/2 mantissa bits; lo = a - hi is exact because hi and
+    a share sign/exponent and agree on high bits (Sterbenz).  Unlike the
+    Veltkamp split there is no float multiply for the compiler to contract.
+    """
+    mask, uint = _mask_for(a.dtype)
+    bits = jax.lax.bitcast_convert_type(a, uint)
+    hi = jax.lax.bitcast_convert_type(bits & mask, a.dtype)
+    lo = a - hi
+    return hi, lo
+
+
+def two_prod(a, b):
+    """Near-exact multiplication: p + e == a*b up to TWO_PROD_RELERR[dtype].
+
+    The four partial products of the mask splits are (near-)exactly
+    representable, so assembling them with two_sum chains is immune to fma
+    contraction (see module docstring).  ``p`` is within 1 ulp of fl(a*b).
+    """
+    ah, al = mask_split(a)
+    bh, bl = mask_split(b)
+    m1 = ah * bh  # exact
+    m2 = ah * bl  # exact
+    m3 = al * bh  # exact
+    m4 = al * bl  # <= 1/2 ulp error at 2^-(2p+2)|ab| scale (p+1-bit operands)
+    s, e1 = two_sum(m1, m2)
+    s, e2 = two_sum(s, m3)
+    s, e3 = two_sum(s, m4)
+    e = e1 + (e2 + e3)
+    return s, e
+
+
+def _mask_keep(dtype, keep: int):
+    """Mask clearing all but the top ``keep`` explicit mantissa bits."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.float64:
+        return jnp.uint64((0xFFFFFFFFFFFFFFFF >> (52 - keep)) << (52 - keep)), jnp.uint64
+    if dtype == jnp.float32:
+        return jnp.uint32((0xFFFFFFFF >> (23 - keep)) << (23 - keep)), jnp.uint32
+    raise ValueError(f"unsupported limb dtype {dtype}")
+
+
+def _mask_split_keep(a, keep: int):
+    mask, uint = _mask_keep(a.dtype, keep)
+    bits = jax.lax.bitcast_convert_type(a, uint)
+    hi = jax.lax.bitcast_convert_type(bits & mask, a.dtype)
+    return hi, a - hi
+
+
+def two_prod_terms(a, b):
+    """a*b as a list of floats summing to the product EXACTLY.
+
+    The low x low partial of the two-way mask split can carry one bit too
+    many (f64), so its second factor is re-split; every returned term is an
+    exactly-representable product, keeping the decomposition both exact and
+    fma-contraction-proof.  Used by the quad-word layer, where two_prod's
+    2^-105 slack would dominate the error budget.
+    """
+    ah, al = mask_split(a)
+    bh, bl = mask_split(b)
+    if jnp.dtype(a.dtype) == jnp.float64:
+        blh, bll = _mask_split_keep(bl, 12)  # 27-bit al x {13, 14}-bit halves
+        return [ah * bh, ah * bl, al * bh, al * blh, al * bll]
+    return [ah * bh, ah * bl, al * bh, al * bl]  # f32: 12/12 split, all exact
+
+
+def two_prod_exact(a, b):
+    """Exact two_prod: p + e == a*b exactly (distilled from exact terms)."""
+    terms = two_prod_terms(a, b)
+    for _ in range(3):  # vecsum sweeps converge the fixed-size expansion
+        out = [None] * len(terms)
+        s = terms[-1]
+        for i in range(len(terms) - 2, -1, -1):
+            s, err = two_sum(terms[i], s)
+            out[i + 1] = err
+        out[0] = s
+        terms = out
+    # fold the (now far-below-ulp^2) tail exactly into the second limb
+    e = terms[1]
+    for t in terms[2:]:
+        e, r = two_sum(e, t)
+        # r is zero after convergence; add it anyway to keep exactness
+        e = e + r
+    return quick_two_sum(terms[0], e)

@@ -1,0 +1,50 @@
+"""Backend dispatch for binary128-class GEMM.
+
+Backends (all produce DD results with ~2^-104-grade accumulation):
+
+  pallas — the systolic-tile Pallas kernel (kernels/ddgemm.py); the paper's
+           design.  interpret-mode on CPU, native on TPU.
+  ozaki  — error-free slicing onto native GEMMs (core/ozaki.py); the
+           beyond-paper MXU path.  Fastest on both CPU (f64 XLA dot) and
+           TPU (bf16 MXU dot).
+  xla    — blocked jnp DD matmul (kernels/ops.matmul_dd_xla); portable
+           fallback.
+  ref    — O(m*k*n)-memory oracle (kernels/ref.py); tests only.
+
+``auto`` picks ozaki (it rides the platform's native dot and is the fastest
+correct path everywhere); the paper-faithful kernel remains selectable per
+call or via REPRO_GEMM_BACKEND.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from . import dd, ozaki
+
+__all__ = ["matmul", "BACKENDS"]
+
+BACKENDS = ("auto", "pallas", "ozaki", "xla", "ref")
+
+
+def matmul(a: dd.DD, b: dd.DD, *, backend: str = "auto", **kwargs) -> dd.DD:
+    """C = A @ B in double-word arithmetic via the selected backend."""
+    backend = backend if backend != "auto" else os.environ.get(
+        "REPRO_GEMM_BACKEND", "ozaki")
+    if backend == "ozaki":
+        return ozaki.ozaki_gemm(a, b, **kwargs)
+    if backend == "pallas":
+        from repro.kernels.ops import ddgemm
+
+        return ddgemm(a, b, **kwargs)
+    if backend == "xla":
+        from repro.kernels.ops import matmul_dd_xla
+
+        return matmul_dd_xla(a, b, **kwargs)
+    if backend == "ref":
+        from repro.kernels.ref import ddgemm_ref
+
+        return ddgemm_ref(a, b)
+    raise ValueError(f"unknown GEMM backend {backend!r}; one of {BACKENDS}")

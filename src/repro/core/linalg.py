@@ -1,0 +1,262 @@
+"""Binary128-class dense linear algebra on top of the DD GEMM (paper §V-A).
+
+``rgetrf`` is the blocked right-looking LU of MPLAPACK's Rgetrf exactly as
+the paper modifies it: panel factorization + triangular solve on the host
+path, and the O(n^3) trailing update ``A22 -= L21 @ U12`` routed through the
+accelerated ``rgemm`` (step 5 of the paper's algorithm, the part it offloads
+to the FPGA).  ``rpotrf``/``rtrsm`` supply the Cholesky machinery the SDP
+solver (core/sdp.py) needs.
+
+Panel/solve kernels are jitted with masked fori_loops (static shapes, traced
+indices); the outer block loop runs on the host like the paper's.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dd
+from .blas import rgemm
+
+__all__ = [
+    "rgetrf",
+    "rgetrf2",
+    "rtrsm",
+    "rpotrf",
+    "lu_solve",
+    "cholesky_solve",
+    "apply_pivots",
+]
+
+
+def _dyn_cell(x: dd.DD, i, j) -> dd.DD:
+    hi = jax.lax.dynamic_slice(x.hi, (i, j), (1, 1))
+    lo = jax.lax.dynamic_slice(x.lo, (i, j), (1, 1))
+    return dd.DD(hi, lo)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rgetrf2(a_hi, a_lo):
+    """Unblocked LU with partial pivoting on an (m, nb) panel. Jitted.
+
+    Returns (lu_hi, lu_lo, piv) with piv[j] = row swapped with j at step j.
+    """
+    m, nb = a_hi.shape
+    rows = jnp.arange(m)
+    cols = jnp.arange(nb)
+
+    def step(j, carry):
+        hi, lo, piv = carry
+        col_hi = jax.lax.dynamic_slice(hi, (0, j), (m, 1))[:, 0]
+        cand = jnp.where(rows >= j, jnp.abs(col_hi), -1.0)
+        p = jnp.argmax(cand)
+        # swap rows j <-> p
+        idx = jnp.where(rows == j, p, jnp.where(rows == p, j, rows))
+        hi, lo = hi[idx], lo[idx]
+        piv = jnp.where(cols == j, p.astype(piv.dtype), piv)
+        pivot = _dyn_cell(dd.DD(hi, lo), j, j)  # (1,1)
+        col = dd.DD(
+            jax.lax.dynamic_slice(hi, (0, j), (m, 1)),
+            jax.lax.dynamic_slice(lo, (0, j), (m, 1)),
+        )
+        below = (rows > j)[:, None]
+        scaled = dd.div(col, dd.DD(jnp.broadcast_to(pivot.hi, col.shape),
+                                   jnp.broadcast_to(pivot.lo, col.shape)))
+        new_col = dd.where(below, scaled, col)
+        col_sel = (cols == j)[None, :]
+        hi = jnp.where(col_sel, new_col.hi, hi)
+        lo = jnp.where(col_sel, new_col.lo, lo)
+        # trailing rank-1 update: A[i, c] -= L[i, j] * U[j, c]  (i > j, c > j)
+        urow = dd.DD(
+            jax.lax.dynamic_slice(hi, (j, 0), (1, nb)),
+            jax.lax.dynamic_slice(lo, (j, 0), (1, nb)),
+        )
+        upd = dd.mul(new_col, urow)  # (m, nb) broadcast outer product
+        mask = below & (cols > j)[None, :]
+        cur = dd.DD(hi, lo)
+        newm = dd.sub(cur, upd)
+        hi = jnp.where(mask, newm.hi, hi)
+        lo = jnp.where(mask, newm.lo, lo)
+        return hi, lo, piv
+
+    piv0 = jnp.zeros(nb, dtype=jnp.int32)
+    hi, lo, piv = jax.lax.fori_loop(0, min(m, nb), step, (a_hi, a_lo, piv0))
+    return hi, lo, piv
+
+
+@functools.partial(jax.jit, static_argnames=("lower", "unit_diag", "transpose_a"))
+def _trsm(l_hi, l_lo, b_hi, b_lo, *, lower: bool, unit_diag: bool,
+          transpose_a: bool):
+    """Solve op(T) X = B for triangular T, forward/backward substitution."""
+    if transpose_a:
+        l_hi, l_lo, lower = l_hi.T, l_lo.T, not lower
+    nb = l_hi.shape[0]
+    n = b_hi.shape[1]
+    t = dd.DD(l_hi, l_lo)
+    rows = jnp.arange(nb)
+
+    def solve_row(i, carry):
+        x_hi, x_lo = carry
+        # i-th row of T, masked to the already-solved triangle
+        trow = dd.DD(
+            jax.lax.dynamic_slice(l_hi, (i, 0), (1, nb))[0],
+            jax.lax.dynamic_slice(l_lo, (i, 0), (1, nb))[0],
+        )
+        solved_mask = (rows < i) if lower else (rows > i)
+        tcol = dd.where(solved_mask[:, None], dd.DD(trow.hi[:, None], trow.lo[:, None]),
+                        dd.zeros((nb, 1)))
+        contrib = dd.sum_(dd.mul(tcol, dd.DD(x_hi, x_lo)), axis=0)  # (n,)
+        brow = dd.DD(
+            jax.lax.dynamic_slice(b_hi, (i, 0), (1, n))[0],
+            jax.lax.dynamic_slice(b_lo, (i, 0), (1, n))[0],
+        )
+        xi = dd.sub(brow, contrib)
+        if not unit_diag:
+            piv = _dyn_cell(t, i, i)
+            xi = dd.div(xi, dd.DD(jnp.broadcast_to(piv.hi[0], xi.shape),
+                                  jnp.broadcast_to(piv.lo[0], xi.shape)))
+        sel = (rows == i)[:, None]
+        x_hi = jnp.where(sel, xi.hi[None, :], x_hi)
+        x_lo = jnp.where(sel, xi.lo[None, :], x_lo)
+        return x_hi, x_lo
+
+    x0 = (jnp.zeros_like(b_hi), jnp.zeros_like(b_lo))
+    if lower:
+        x_hi, x_lo = jax.lax.fori_loop(0, nb, solve_row, x0)
+    else:
+        x_hi, x_lo = jax.lax.fori_loop(
+            0, nb, lambda k, c: solve_row(nb - 1 - k, c), x0)
+    return x_hi, x_lo
+
+
+def rtrsm(t: dd.DD, b: dd.DD, *, lower: bool = True, unit_diag: bool = False,
+          transpose_a: bool = False) -> dd.DD:
+    hi, lo = _trsm(t.hi, t.lo, b.hi, b.lo, lower=lower, unit_diag=unit_diag,
+                   transpose_a=transpose_a)
+    return dd.DD(hi, lo)
+
+
+def apply_pivots(x: dd.DD, piv: np.ndarray, offset: int = 0) -> dd.DD:
+    """Apply LAPACK-style sequential row interchanges piv (local indices)."""
+    perm = np.arange(x.shape[0])
+    for j, p in enumerate(np.asarray(piv)):
+        pj = int(p) + offset
+        jj = j + offset
+        perm[jj], perm[pj] = perm[pj], perm[jj]
+    idx = jnp.asarray(perm)
+    return dd.DD(x.hi[idx], x.lo[idx])
+
+
+def rgetrf(a: dd.DD, block: int = 64, backend: str = "auto"):
+    """Blocked LU with partial pivoting (paper's Rgetrf, steps 1-6).
+
+    Returns (lu, piv) with L\\U packed and piv the global LAPACK-style
+    interchange vector.  GEMM updates go through ``rgemm(backend=...)``.
+    """
+    m, n = a.shape
+    assert m == n, "square only (paper's setting)"
+    lu = a
+    piv_global = np.zeros(n, dtype=np.int64)
+    for p0 in range(0, n, block):
+        nb = min(block, n - p0)
+        panel = dd.DD(lu.hi[p0:, p0:p0 + nb], lu.lo[p0:, p0:p0 + nb])
+        ph, plo, ppiv = rgetrf2(panel.hi, panel.lo)
+        ppiv = np.asarray(ppiv)
+        piv_global[p0:p0 + nb] = ppiv + p0
+        # apply the panel's row swaps to the columns outside the panel
+        rest = dd.DD(lu.hi[p0:, :], lu.lo[p0:, :])
+        rest = apply_pivots(rest, ppiv)
+        hi = rest.hi.at[:, p0:p0 + nb].set(ph)
+        lo = rest.lo.at[:, p0:p0 + nb].set(plo)
+        lu = dd.DD(
+            jnp.concatenate([lu.hi[:p0], hi], axis=0),
+            jnp.concatenate([lu.lo[:p0], lo], axis=0),
+        )
+        if p0 + nb < n:
+            l11 = dd.DD(lu.hi[p0:p0 + nb, p0:p0 + nb],
+                        lu.lo[p0:p0 + nb, p0:p0 + nb])
+            a12 = dd.DD(lu.hi[p0:p0 + nb, p0 + nb:],
+                        lu.lo[p0:p0 + nb, p0 + nb:])
+            u12 = rtrsm(l11, a12, lower=True, unit_diag=True)
+            hi = lu.hi.at[p0:p0 + nb, p0 + nb:].set(u12.hi)
+            lo = lu.lo.at[p0:p0 + nb, p0 + nb:].set(u12.lo)
+            lu = dd.DD(hi, lo)
+            # the accelerated step: A22 -= L21 @ U12
+            l21 = dd.DD(lu.hi[p0 + nb:, p0:p0 + nb],
+                        lu.lo[p0 + nb:, p0:p0 + nb])
+            a22 = dd.DD(lu.hi[p0 + nb:, p0 + nb:],
+                        lu.lo[p0 + nb:, p0 + nb:])
+            upd = rgemm("n", "n", -1.0, l21, u12, 1.0, a22, backend=backend)
+            hi = lu.hi.at[p0 + nb:, p0 + nb:].set(upd.hi)
+            lo = lu.lo.at[p0 + nb:, p0 + nb:].set(upd.lo)
+            lu = dd.DD(hi, lo)
+    return lu, piv_global
+
+
+def lu_solve(lu: dd.DD, piv: np.ndarray, b: dd.DD) -> dd.DD:
+    """Solve A x = b given rgetrf output (forward + backward substitution)."""
+    n = lu.shape[0]
+    perm = np.arange(n)
+    for j, p in enumerate(np.asarray(piv)):
+        perm[j], perm[p] = perm[p], perm[j]
+    idx = jnp.asarray(perm)
+    pb = dd.DD(b.hi[idx], b.lo[idx])
+    y = rtrsm(lu, pb, lower=True, unit_diag=True)
+    return rtrsm(lu, y, lower=False, unit_diag=False)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _potrf(a_hi, a_lo):
+    n = a_hi.shape[0]
+    rows = jnp.arange(n)
+
+    def step(j, carry):
+        l_hi, l_lo = carry
+        lmat = dd.DD(l_hi, l_lo)
+        # d = sqrt(a_jj - sum_{k<j} L[j,k]^2)
+        rowj = dd.DD(
+            jax.lax.dynamic_slice(l_hi, (j, 0), (1, n))[0],
+            jax.lax.dynamic_slice(l_lo, (j, 0), (1, n))[0],
+        )
+        maskk = (rows < j)
+        rowj = dd.where(maskk, rowj, dd.zeros((n,)))
+        s = dd.sum_(dd.mul(rowj, rowj), axis=0)
+        ajj = _dyn_cell(lmat, j, j)
+        d = dd.sqrt(dd.sub(dd.DD(ajj.hi[0, 0], ajj.lo[0, 0]), s))
+        # column below: L[i,j] = (A[i,j] - sum_k L[i,k] L[j,k]) / d
+        colA = dd.DD(
+            jax.lax.dynamic_slice(l_hi, (0, j), (n, 1))[:, 0],
+            jax.lax.dynamic_slice(l_lo, (0, j), (n, 1))[:, 0],
+        )
+        lik = dd.where(maskk[None, :], lmat, dd.zeros((n, n)))  # (n, k<j)
+        contrib = dd.sum_(dd.mul(lik, dd.DD(rowj.hi[None, :], rowj.lo[None, :])), axis=1)
+        num = dd.sub(colA, contrib)
+        col = dd.div(num, dd.DD(jnp.broadcast_to(d.hi, num.shape),
+                                jnp.broadcast_to(d.lo, num.shape)))
+        below = rows > j
+        diag = rows == j
+        new_hi = jnp.where(below, col.hi, jnp.where(diag, d.hi, 0.0))
+        new_lo = jnp.where(below, col.lo, jnp.where(diag, d.lo, 0.0))
+        sel = (rows == j)[None, :]
+        l_hi = jnp.where(sel, new_hi[:, None], l_hi)
+        l_lo = jnp.where(sel, new_lo[:, None], l_lo)
+        return l_hi, l_lo
+
+    l_hi, l_lo = jax.lax.fori_loop(0, n, step, (a_hi, a_lo))
+    return jnp.tril(l_hi), jnp.tril(l_lo)
+
+
+def rpotrf(a: dd.DD) -> dd.DD:
+    """Lower Cholesky factor in DD arithmetic: A = L L^T."""
+    hi, lo = _potrf(a.hi, a.lo)
+    return dd.DD(hi, lo)
+
+
+def cholesky_solve(l: dd.DD, b: dd.DD) -> dd.DD:
+    """Solve (L L^T) x = b."""
+    y = rtrsm(l, b, lower=True, unit_diag=False)
+    return rtrsm(l, y, lower=True, unit_diag=False, transpose_a=True)

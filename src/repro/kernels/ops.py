@@ -1,0 +1,93 @@
+"""Public jit'd entry points for the extended-precision GEMM kernels.
+
+``ddgemm`` handles arbitrary (m, k) x (k, n) shapes by zero-padding to block
+multiples (zeros are exact in DD arithmetic, so padding never changes the
+result), then calls the Pallas kernel.  ``interpret=None`` auto-selects
+interpret mode off-TPU so the same call site deploys unchanged on hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dd
+from .ddgemm import DEFAULT_BLOCKS, ddgemm_kernel_call
+
+__all__ = ["ddgemm", "matmul_dd_xla"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, rows, cols):
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+def _round_up(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+def ddgemm(a: dd.DD, b: dd.DD, *, bm: int | None = None, bn: int | None = None,
+           bk: int | None = None, interpret: bool | None = None) -> dd.DD:
+    """C = A @ B in double-word arithmetic via the Pallas systolic-tile kernel."""
+    bm = bm or DEFAULT_BLOCKS["bm"]
+    bn = bn or DEFAULT_BLOCKS["bn"]
+    bk = bk or DEFAULT_BLOCKS["bk"]
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} x {b.shape}")
+    # clamp blocks to (padded) problem size so tiny problems stay tiny
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    a_hi, a_lo = _pad_to(a.hi, mp, kp), _pad_to(a.lo, mp, kp)
+    b_hi, b_lo = _pad_to(b.hi, kp, np_), _pad_to(b.lo, kp, np_)
+    o_hi, o_lo = ddgemm_kernel_call(
+        a_hi, a_lo, b_hi, b_lo, bm=bm, bn=bn, bk=bk, interpret=interpret
+    )
+    return dd.DD(o_hi[:m, :n], o_lo[:m, :n])
+
+
+def matmul_dd_xla(a: dd.DD, b: dd.DD, *, chunk: int = 16) -> dd.DD:
+    """Blocked XLA (non-Pallas) DD matmul — the 'host fallback' backend.
+
+    Streams K in chunks; each chunk materializes exact (m, chunk, n) DD
+    products and reduces them with the compensated halving tree.  Used for
+    CPU-side benchmarking at sizes where the O(m*k*n) oracle is infeasible.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    kp = _round_up(k, chunk)
+    a = dd.DD(_pad_to(a.hi, m, kp), _pad_to(a.lo, m, kp))
+    b = dd.DD(_pad_to(b.hi, kp, n), _pad_to(b.lo, kp, n))
+    nchunks = kp // chunk
+
+    def body(acc, idx):
+        a_blk = dd.DD(
+            jax.lax.dynamic_slice_in_dim(a.hi, idx * chunk, chunk, 1),
+            jax.lax.dynamic_slice_in_dim(a.lo, idx * chunk, chunk, 1),
+        )
+        b_blk = dd.DD(
+            jax.lax.dynamic_slice_in_dim(b.hi, idx * chunk, chunk, 0),
+            jax.lax.dynamic_slice_in_dim(b.lo, idx * chunk, chunk, 0),
+        )
+        prods = dd.mul(
+            dd.DD(a_blk.hi[:, :, None], a_blk.lo[:, :, None]),
+            dd.DD(b_blk.hi[None, :, :], b_blk.lo[None, :, :]),
+        )
+        part = dd.sum_(prods, axis=1)
+        acc = dd.add(acc, part)
+        return acc, None
+
+    init = dd.zeros((m, n), dtype=a.hi.dtype)
+    acc, _ = jax.lax.scan(body, init, jnp.arange(nchunks))
+    return acc

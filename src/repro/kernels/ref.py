@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the extended-precision GEMM kernels.
+
+These are the correctness references (the paper's CPU `Rgemm` analogue): a
+vectorized exact-product + compensated-tree-reduction matmul in DD, and a
+small-QD variant.  They favor clarity over speed and are used by every kernel
+test as the allclose target.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import dd, qd
+
+__all__ = ["ddgemm_ref", "qdgemm_ref", "gemm_f64_ref"]
+
+
+def ddgemm_ref(a: dd.DD, b: dd.DD) -> dd.DD:
+    """C = A @ B with DD inputs, exact products, DD tree accumulation.
+
+    Shapes: a (m, k), b (k, n) -> (m, n).  Memory O(m*k*n) — test sizes only.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    abig = dd.DD(a.hi[:, :, None], a.lo[:, :, None])  # (m, k, 1)
+    bbig = dd.DD(b.hi[None, :, :], b.lo[None, :, :])  # (1, k, n)
+    prods = dd.mul(abig, bbig)  # (m, k, n) exact per-element DD products
+    return dd.sum_(prods, axis=1)  # compensated halving-tree reduction over k
+
+
+def qdgemm_ref(a: qd.QD, b: qd.QD) -> qd.QD:
+    """C = A @ B in quad-word arithmetic (small shapes only)."""
+    m, k = a.shape
+    _, n = b.shape
+    al = [x[:, :, None] for x in a.limbs()]
+    bl = [x[None, :, :] for x in b.limbs()]
+    prods = qd.mul(qd.QD(*al), qd.QD(*bl))  # (m, k, n)
+    cur = prods
+    kk = k
+    while kk > 1:
+        half = kk // 2
+        left = qd.QD(*[l[:, :half, :] for l in cur.limbs()])
+        right = qd.QD(*[l[:, half : 2 * half, :] for l in cur.limbs()])
+        red = qd.add(left, right)
+        if kk % 2:
+            tail = qd.QD(*[l[:, -1:, :] for l in cur.limbs()])
+            red = qd.add(
+                red,
+                qd.QD(
+                    *[
+                        jnp.concatenate([t, jnp.zeros_like(r[:, 1:, :])], axis=1)
+                        for t, r in zip(tail.limbs(), red.limbs())
+                    ]
+                ),
+            )
+        cur = red
+        kk = half
+    return qd.QD(*[l[:, 0, :] for l in cur.limbs()])
+
+
+def gemm_f64_ref(a, b):
+    """Plain f64 matmul — the 'double' baseline the paper compares against."""
+    return jnp.dot(jnp.asarray(a, jnp.float64), jnp.asarray(b, jnp.float64))

@@ -1,0 +1,254 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh, record memory/cost analysis + roofline terms.
+
+The two lines above MUST precede any jax-importing import: jax locks the
+device count at first backend init, and only this entry point is allowed to
+force the 512-device host emulation (tests and benches see 1 device).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_config, skip_reason  # noqa: E402
+from repro.configs.registry import ALL_ARCHS  # noqa: E402
+from repro.launch import steps as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.hlo_cost import analyze_hlo  # noqa: E402
+from repro.launch.roofline import roofline_report  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.runtime.sharding import ShardingRules, activate  # noqa: E402
+
+
+def _dp_axes(rules):
+    return tuple(a for a in ("pod", "data") if a in rules.mesh.axis_names)
+
+
+def _divisible_axis_spec(rules, shape, prefer_dims, mesh_axis="model"):
+    """First dim in prefer_dims divisible by the mesh axis gets sharded."""
+    size = rules.mesh.shape[mesh_axis]
+    for d in prefer_dims:
+        if shape[d] % size == 0 and shape[d] >= size:
+            spec = [None] * len(shape)
+            spec[d] = mesh_axis
+            return spec
+    return [None] * len(shape)
+
+
+def decode_state_shardings(cfg, state_like, rules: ShardingRules, batch: int):
+    """Shard decode caches: kv-heads (or seq) over model, batch over data."""
+    dp = _dp_axes(rules)
+    dp_total = 1
+    for a in dp:
+        dp_total *= rules.mesh.shape[a]
+
+    def leaf_spec(leaf):
+        shape = leaf.shape
+        spec = _divisible_axis_spec(rules, shape, _model_dims(shape))
+        # batch dim: the dim equal to `batch` (first occurrence), only if
+        # divisible by the dp extent
+        if batch > 1 and batch % dp_total == 0:
+            for i, s in enumerate(shape):
+                if s == batch and spec[i] is None:
+                    spec[i] = dp
+                    break
+        return NamedSharding(rules.mesh,
+                             S.validate_spec(rules.mesh, P(*spec), shape))
+
+    def _model_dims(shape):
+        # prefer head-like dims (== n_kv_heads / n_heads), then large dims
+        cands = [i for i, s in enumerate(shape)
+                 if s in (cfg.n_kv_heads, cfg.n_heads)]
+        cands += [i for i, s in enumerate(shape)
+                  if s >= 256 and i not in cands]
+        return cands
+
+    return jax.tree.map(leaf_spec, state_like)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               run_overrides: dict | None = None, rules_overrides=None):
+    """Lower + compile one cell. Returns the result record."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(mesh=mesh)
+    if rules_overrides:
+        rules = rules_overrides(rules)
+    n_dev = mesh.size
+    t0 = time.time()
+
+    with activate(rules):
+        if shape.kind == "train":
+            run_cfg = S.default_run_config(arch, **(run_overrides or {}))
+            step_fn = S.build_train_step(cfg, run_cfg)
+            state_sds = S.state_specs(cfg, run_cfg)
+            state_sh = S.state_shardings(cfg, run_cfg, rules)
+            specs = M.input_specs(cfg, shape)
+            batch_sh = S.batch_shardings(cfg, shape.kind, rules, specs)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_sds, specs)
+        elif shape.kind == "prefill":
+            run_cfg = S.default_run_config(arch)
+            step_fn = S.build_encode_step(cfg)
+            params_sds = S.state_specs(cfg, run_cfg).params
+            params_sh = S.state_shardings(cfg, run_cfg, rules).params
+            specs = M.input_specs(cfg, shape)
+            batch_sh = S.batch_shardings(cfg, shape.kind, rules, specs)
+            out_shape = jax.eval_shape(step_fn, params_sds, specs)
+            logits_sh = NamedSharding(
+                rules.mesh,
+                S.validate_spec(rules.mesh,
+                                P(_dp_axes(rules), None, "model"),
+                                out_shape.shape))
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=logits_sh,
+            ).lower(params_sds, specs)
+        else:  # decode
+            run_cfg = S.default_run_config(arch, param_dtype="bfloat16",
+                                           optimizer="adamw")
+            serve = S.build_serve_step(cfg)
+            params_sds = S.state_specs(cfg, run_cfg).params
+            params_sh = S.state_shardings(cfg, run_cfg, rules).params
+            cache_sds = jax.eval_shape(
+                lambda: M.init_decode_state(cfg, shape.global_batch,
+                                            shape.seq_len))
+            cache_sh = decode_state_shardings(cfg, cache_sds, rules,
+                                              shape.global_batch)
+            specs = M.input_specs(cfg, shape)
+            tok_sh = S.batch_shardings(cfg, shape.kind, rules,
+                                       {"tokens": specs["tokens"]})["tokens"]
+            lspec = P(None, "model") if shape.global_batch == 1 \
+                else P(_dp_axes(rules), "model")
+            logits_sh = NamedSharding(
+                rules.mesh,
+                S.validate_spec(rules.mesh, lspec,
+                                (shape.global_batch, cfg.vocab_size)))
+            lowered = jax.jit(
+                serve,
+                in_shardings=(params_sh, cache_sh, tok_sh, None),
+                out_shardings=(logits_sh, cache_sh),
+                donate_argnums=(1,),
+            ).lower(params_sds, cache_sds, specs["tokens"],
+                    jax.ShapeDtypeStruct((), jnp.int32))
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    # NOTE: compiled.cost_analysis() counts while-loop bodies ONCE (verified
+    # empirically) — useless for scanned models.  analyze_hlo re-derives
+    # per-device costs with loop trip counts (launch/hlo_cost.py).
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)
+    flops = cost.flops
+    bytes_acc = cost.dot_bytes
+    coll = {"total": cost.collective_wire_bytes,
+            **cost.collective_by_kind, "counts": cost.collective_counts}
+    roof = roofline_report(cfg, shape, flops_per_dev=flops,
+                           bytes_per_dev=bytes_acc, coll=coll,
+                           n_devices=n_dev)
+    per_dev_bytes = {
+        "argument_size": mem.argument_size_in_bytes,
+        "output_size": mem.output_size_in_bytes,
+        "temp_size": mem.temp_size_in_bytes,
+        "alias_size": mem.alias_size_in_bytes,
+        "peak_estimate": (mem.argument_size_in_bytes
+                          + mem.output_size_in_bytes
+                          + mem.temp_size_in_bytes
+                          - mem.alias_size_in_bytes),
+    }
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_per_device": per_dev_bytes,
+        "fits_16gb": per_dev_bytes["peak_estimate"] < 16e9,
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes": {k: v for k, v in coll.items() if k != "counts"},
+        "collective_counts": coll["counts"],
+        "roofline": roof,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                label = f"{arch} x {shape} [{'2x16x16' if mp else '16x16'}]"
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                if rec.get("skipped"):
+                    print(f"SKIP  {label}: {rec['skipped']}", flush=True)
+                elif rec.get("error"):
+                    print(f"FAIL  {label}: {rec['error']}", flush=True)
+                else:
+                    r = rec["roofline"]
+                    print(
+                        f"OK    {label}: mem/dev "
+                        f"{rec['memory_per_device']['peak_estimate']/1e9:.2f}GB "
+                        f"compute {r['compute_s']*1e3:.2f}ms "
+                        f"memory {r['memory_s']*1e3:.2f}ms "
+                        f"coll {r['collective_s']*1e3:.2f}ms "
+                        f"-> {r['bottleneck']} "
+                        f"frac {r['roofline_fraction']:.3f}",
+                        flush=True)
+                results.append(rec)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if "roofline" in r)
+    fail = sum(1 for r in results if "error" in r)
+    skip = sum(1 for r in results if "skipped" in r)
+    print(f"\n{ok} compiled, {skip} skipped (by design), {fail} failed")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

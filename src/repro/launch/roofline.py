@@ -1,0 +1,163 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step, derived from
+the per-device compiled program:
+
+  compute    = HLO_flops_per_device / peak_flops          (197 TF bf16, v5e)
+  memory     = HLO_bytes_per_device / hbm_bw              (819 GB/s)
+  collective = wire_bytes_per_device / link_bw            (~50 GB/s/link)
+
+cost_analysis() provides flops and bytes; collective bytes are parsed from
+the optimized HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op's operand/result sizes, weighted by the
+standard ring-algorithm wire factors:
+
+  all-gather      out_bytes * (g-1)/g
+  reduce-scatter  out_bytes * (g-1)          (input is g x output)
+  all-reduce      2 * bytes * (g-1)/g
+  all-to-all      bytes * (g-1)/g
+  collective-permute  bytes
+
+MODEL_FLOPS (6*N*D for training, 2*N_active*D for inference forward) gives
+the useful-compute ratio — remat recompute and padding waste show up as
+HLO_flops >> MODEL_FLOPS.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+__all__ = ["HW", "parse_collective_bytes", "roofline_report", "model_flops"]
+
+HW = {
+    "peak_flops": 197e12,   # bf16 per chip, TPU v5e
+    "hbm_bw": 819e9,        # bytes/s
+    "link_bw": 50e9,        # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^)]*\}|\[[\d,]+\]<=\[\d+\])")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 2
+    spec = m.group(1)
+    if spec.startswith("{{"):
+        first = spec[2:].split("}")[0]
+        return max(1, first.count(",") + 1)
+    dims = spec[1:spec.index("]")].split(",")
+    return int(dims[-1]) if dims else 2
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind (ring-algorithm model)."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(type_str)
+        g = _group_size(line)
+        if kind == "all-gather":
+            wire = size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = size * (g - 1)
+        elif kind == "all-reduce":
+            wire = 2 * size * (g - 1) / g
+        elif kind == "all-to-all":
+            wire = size * (g - 1) / g
+        else:
+            wire = size
+        out[kind] += wire
+        counts[kind] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful flops per step for the whole cell (all chips)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        base = 6.0 * n_active * tokens
+        attn = _attn_flops(cfg, shape.seq_len, shape.global_batch) * 3
+    elif shape.kind == "prefill":
+        base = 2.0 * n_active * tokens
+        attn = _attn_flops(cfg, shape.seq_len, shape.global_batch)
+    else:  # decode: one token against a seq_len cache
+        base = 2.0 * n_active * shape.global_batch
+        attn = _decode_attn_flops(cfg, shape.seq_len, shape.global_batch)
+    return base + attn
+
+
+def _attn_flops(cfg, s, b) -> float:
+    if cfg.family in ("ssm",):
+        return 0.0
+    n_attn = cfg.n_layers if cfg.family != "hybrid" \
+        else cfg.n_layers // max(cfg.attn_every, 1)
+    return 4.0 * b * n_attn * cfg.n_heads * cfg.head_dim * s * s / 2
+
+
+def _decode_attn_flops(cfg, s, b) -> float:
+    if cfg.family == "ssm":
+        return 0.0
+    n_attn = cfg.n_layers if cfg.family != "hybrid" \
+        else cfg.n_layers // max(cfg.attn_every, 1)
+    return 4.0 * b * n_attn * cfg.n_heads * cfg.head_dim * s
+
+
+def roofline_report(cfg, shape, *, flops_per_dev: float, bytes_per_dev: float,
+                    coll: dict, n_devices: int, hw: Optional[dict] = None) -> dict:
+    hw = hw or HW
+    t_comp = flops_per_dev / hw["peak_flops"]
+    t_mem = bytes_per_dev / hw["hbm_bw"]
+    t_coll = coll["total"] / hw["link_bw"]
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_per_dev * n_devices
+    step_s = max(t_comp, t_mem, t_coll)
+    return {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else float("nan"),
+        "roofline_step_s": step_s,
+        # fraction of the chips' peak the USEFUL flops achieve at the
+        # roofline-implied step time — the headline perf score
+        "roofline_fraction": (mf / (n_devices * hw["peak_flops"])) / step_s
+        if step_s else float("nan"),
+    }

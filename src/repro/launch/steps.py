@@ -1,0 +1,259 @@
+"""Step builders shared by the dry-run, the trainer, and the server.
+
+Everything here is mesh-agnostic: functions close over (cfg, run_cfg) and
+get distribution purely from in/out shardings + the logical-axis constraint
+context (runtime/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import model as M
+from repro.optim import make_optimizer
+from repro.runtime.sharding import ShardingRules
+
+__all__ = [
+    "TrainState",
+    "build_train_step",
+    "build_serve_step",
+    "build_encode_step",
+    "state_specs",
+    "state_shardings",
+    "batch_shardings",
+    "default_run_config",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+# per-arch run-config overrides that make the big cells fit 256 v5e chips:
+# remat=full + gradient-accumulation microbatching bound the activation
+# footprint; int8 optimizer states + bf16 params bound the state footprint
+_RUN_OVERRIDES = {
+    "llama3-405b": dict(param_dtype="bfloat16", optimizer="adamw_int8",
+                        microbatches=16, remat="full"),
+    "qwen3-moe-235b-a22b": dict(optimizer="adamw_int8", microbatches=16,
+                                remat="full"),
+    "mistral-nemo-12b": dict(microbatches=8, remat="full"),
+    "llama-3.2-vision-11b": dict(microbatches=8, remat="full"),
+    "moonshot-v1-16b-a3b": dict(microbatches=8, remat="full"),
+    "qwen3-4b": dict(microbatches=4, remat="full"),
+    "qwen3-0.6b": dict(microbatches=4, remat="full"),
+    "zamba2-2.7b": dict(microbatches=4, remat="full"),
+    "xlstm-350m": dict(microbatches=2, remat="full"),
+    "hubert-xlarge": dict(microbatches=4, remat="full"),
+}
+
+
+def default_run_config(arch: str, **extra) -> RunConfig:
+    kw = dict(_RUN_OVERRIDES.get(arch, {}))
+    kw.update(extra)
+    return RunConfig(**kw)
+
+
+def init_state(cfg: ArchConfig, run_cfg: RunConfig, key):
+    dtype = jnp.dtype(run_cfg.param_dtype)
+    params = M.init_params(cfg, key, dtype)
+    opt_init, _ = make_optimizer(run_cfg)
+    return TrainState(params=params, opt=opt_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def state_specs(cfg: ArchConfig, run_cfg: RunConfig):
+    """Abstract state (ShapeDtypeStructs) without allocating anything."""
+    return jax.eval_shape(
+        lambda: init_state(cfg, run_cfg, jax.random.PRNGKey(0)))
+
+
+def validate_spec(mesh, spec: P, shape) -> P:
+    """Drop mesh axes whose extent does not divide the dimension (jit
+
+    in_shardings require exact divisibility, unlike constraints)."""
+    out = []
+    for dim, val in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if val is None:
+            out.append(None)
+            continue
+        axes = val if isinstance(val, tuple) else (val,)
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        out.append(val if dim % extent == 0 and dim >= extent else None)
+    return P(*out)
+
+
+def _param_spec_tree(cfg, params_like, rules: ShardingRules):
+    axes = M.param_logical_axes(cfg, params_like)
+    return jax.tree.map(
+        lambda leaf, names: NamedSharding(
+            rules.mesh,
+            validate_spec(rules.mesh, rules.param_spec(*names), leaf.shape)),
+        params_like, axes)
+
+
+def constrain_like_params(cfg, tree, params_like=None):
+    """Sharding-constrain a param-shaped tree (e.g. grad accumulators) to
+
+    the parameter sharding rules.  No-op outside an active rules context.
+    The gradient-accumulation buffer MUST be constrained: unconstrained
+    zeros in the scan carry replicate, which for llama3-405b is a 1.6 TB
+    per-device buffer (observed before this fix)."""
+    from repro.runtime.sharding import current
+
+    rules = current()
+    if rules is None:
+        return tree
+    shardings = _param_spec_tree(cfg, params_like or tree, rules)
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, shardings)
+
+
+def _dp_spec(rules: ShardingRules, leaf):
+    """ZeRO sharding for non-param-shaped optimizer leaves (int8 blocks)."""
+    dp = tuple(a for a in ("pod", "data") if a in rules.mesh.axis_names)
+    if leaf.ndim >= 1 and leaf.shape[0] >= 2:
+        return NamedSharding(rules.mesh, P(dp, *([None] * (leaf.ndim - 1))))
+    return NamedSharding(rules.mesh, P())
+
+
+def state_shardings(cfg: ArchConfig, run_cfg: RunConfig, rules: ShardingRules):
+    st = state_specs(cfg, run_cfg)
+    p_sh = _param_spec_tree(cfg, st.params, rules)
+
+    # int8 states quantize per-row, so (q, scale) leaves keep the param's
+    # shape (scale has a size-1/2 trailing dim that validate_spec strips):
+    # every optimizer leaf shares the param logical axes.
+    if run_cfg.optimizer == "adamw_int8":
+        axes = M.param_logical_axes(cfg, st.params)
+
+        def qspec(names, leaf):
+            return NamedSharding(
+                rules.mesh,
+                validate_spec(rules.mesh, rules.param_spec(*names), leaf.shape))
+
+        m_sh = jax.tree.map(
+            lambda pax, mq: tuple(qspec(pax, leaf) for leaf in mq),
+            axes, st.opt.m, is_leaf=lambda x: isinstance(x, tuple) and not hasattr(x, "shape"))
+        v_sh = jax.tree.map(
+            lambda pax, vq: tuple(qspec(pax, leaf) for leaf in vq),
+            axes, st.opt.v, is_leaf=lambda x: isinstance(x, tuple) and not hasattr(x, "shape"))
+    else:
+        m_sh = _param_spec_tree(cfg, st.opt.m, rules)
+        v_sh = _param_spec_tree(cfg, st.opt.v, rules)
+    master_sh = None
+    if st.opt.master_lo is not None:
+        master_sh = _param_spec_tree(cfg, st.opt.master_lo, rules)
+    from repro.optim.adamw import OptState
+
+    return TrainState(
+        params=p_sh,
+        opt=OptState(NamedSharding(rules.mesh, P()), m_sh, v_sh, master_sh),
+        step=NamedSharding(rules.mesh, P()),
+    )
+
+
+def batch_shardings(cfg: ArchConfig, shape_kind: str, rules: ShardingRules,
+                    specs: dict):
+    """Input shardings: batch over DP axes; long-context batch=1 shards seq;
+    anything non-divisible falls back to replication (validate_spec)."""
+    dp = tuple(a for a in ("pod", "data") if a in rules.mesh.axis_names)
+    out = {}
+    for name, spec in specs.items():
+        if name == "pos":
+            out[name] = NamedSharding(rules.mesh, P())
+            continue
+        ndim = len(spec.shape)
+        if spec.shape[0] == 1 and ndim >= 2 and spec.shape[1] > 1:
+            # batch=1 long-context: sequence parallelism over data axis
+            p = P(None, dp, *([None] * (ndim - 2)))
+        else:
+            p = P(dp, *([None] * (ndim - 1)))
+        out[name] = NamedSharding(rules.mesh,
+                                  validate_spec(rules.mesh, p, spec.shape))
+    return out
+
+
+def build_train_step(cfg: ArchConfig, run_cfg: RunConfig):
+    _, opt_update = make_optimizer(
+        run_cfg, constrain=lambda tree: constrain_like_params(cfg, tree))
+    mb = run_cfg.microbatches
+    policy = run_cfg.policy or None
+
+    def loss_fn(params, batch):
+        loss, parts = M.train_loss(params, cfg, batch, policy=policy,
+                                   remat=run_cfg.remat)
+        return loss, parts
+
+    grad_dtype = jnp.dtype(run_cfg.param_dtype) \
+        if run_cfg.param_dtype == "bfloat16" else jnp.float32
+
+    def train_step(state: TrainState, batch: dict):
+        if mb <= 1:
+            (loss, parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            def split(x):
+                return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+
+            mbatch = {k: split(v) for k, v in batch.items()}
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, grad_dtype), state.params)
+            zero = constrain_like_params(cfg, zero, state.params)
+
+            def body(carry, mb_batch):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb_batch)
+                # constrain the RAW microbatch grad too: otherwise GSPMD
+                # all-reduces each microbatch's full gradient before the
+                # (sharded) accumulation — 8.5 TB/step of avoidable wire at
+                # 405B scale (§Perf iteration B2)
+                g = constrain_like_params(cfg, g, state.params)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(grad_dtype), g_acc, g)
+                g_acc = constrain_like_params(cfg, g_acc, state.params)
+                return (g_acc, l_acc + l), None
+
+            (grads, loss), _ = jax.lax.scan(
+                body, (zero, jnp.float32(0.0)), mbatch)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss / mb
+        new_params, new_opt, info = opt_update(grads, state.opt, state.params)
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1)
+        metrics = {"loss": loss.astype(jnp.float32), **info}
+        return new_state, metrics
+
+    return train_step
+
+
+def build_serve_step(cfg: ArchConfig, policy=None):
+    def serve_step(params, cache, tokens, pos):
+        return M.decode_step(params, cfg, cache, tokens, pos, policy=policy)
+
+    return serve_step
+
+
+def build_encode_step(cfg: ArchConfig, policy=None):
+    """Encoder-only / prefill forward (no loss)."""
+
+    def encode_step(params, batch):
+        logits, _ = M.forward_logits(params, cfg, batch, policy=policy)
+        return logits
+
+    return encode_step

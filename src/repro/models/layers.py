@@ -1,0 +1,204 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention, SwiGLU MLP.
+
+Pure-JAX modules: parameters are nested dicts of arrays, apply functions are
+plain functions.  Every tensor-parallel-relevant intermediate is annotated
+with logical axis names via runtime.sharding.constrain (no-op off-mesh).
+
+Precision policy hooks: dense projections route through policy.pmatmul so
+any site can be switched to the extended-precision GEMM engine (DESIGN.md
+§3) — the paper's technique as a first-class feature.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+from .policy import pmatmul
+
+__all__ = [
+    "rmsnorm",
+    "rope",
+    "init_dense",
+    "init_norm",
+    "init_attention",
+    "init_mlp",
+    "attention",
+    "cross_attention",
+    "mlp",
+    "KVCache",
+]
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = d_in ** -0.5
+    return jax.random.normal(key, (d_in, d_out), dtype=jnp.float32).astype(dtype) * scale
+
+
+def init_norm(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dtype) * w
+
+
+def rope(x, positions, theta: float = 1e6):
+    """Rotary embedding. x: (..., seq, heads, head_dim), positions (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]  # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (batch, max_len, kv_heads, head_dim)
+    v: jnp.ndarray
+
+
+def init_attention(key, cfg, d_model: int | None = None, dtype=jnp.float32,
+                   n_heads: int | None = None, n_kv: int | None = None):
+    d_model = d_model or cfg.d_model
+    n_heads = n_heads or cfg.n_heads
+    n_kv = n_kv or cfg.n_kv_heads
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d_model, n_heads * hd, dtype),
+        "wk": init_dense(ks[1], d_model, n_kv * hd, dtype),
+        "wv": init_dense(ks[2], d_model, n_kv * hd, dtype),
+        "wo": init_dense(ks[3], n_heads * hd, d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd, dtype)
+        p["k_norm"] = init_norm(hd, dtype)
+    return p
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def attention(p, x, cfg, *, positions, mask=None, cache: Optional[KVCache] = None,
+              cache_pos=None, causal: bool = True, policy=None):
+    """GQA attention with optional qk_norm, RoPE, KV cache (decode).
+
+    x: (batch, seq, d_model).  With cache: seq == 1 decode step writing at
+    cache_pos, attending to cache[: cache_pos + 1].
+    """
+    b, s, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(pmatmul(x, p["wq"], "attn_qkv", policy), nh, hd)
+    k = _split_heads(pmatmul(x, p["wk"], "attn_qkv", policy), nkv, hd)
+    v = _split_heads(pmatmul(x, p["wv"], "attn_qkv", policy), nkv, hd)
+    # constrain q only: kv_heads is often smaller than the model axis
+    # (GQA kv=8 on a 16-way axis) and forcing it causes involuntary
+    # reshard/remat copies; GSPMD propagates k/v sharding from q
+    q = constrain(q, "batch", "seq", "heads", None)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        # decode: write this step's k/v at cache_pos
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), cache_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), cache_pos, axis=1)
+        k_all, v_all = k_cache, v_cache
+        new_cache = KVCache(k_cache, v_cache)
+        kv_len = cache.k.shape[1]
+        kv_pos = jnp.arange(kv_len)
+        valid = kv_pos[None, :] <= (cache_pos + jnp.zeros((b, 1), jnp.int32))
+    else:
+        k_all, v_all = k, v
+        new_cache = None
+        kv_len = s
+        valid = None
+
+    # grouped heads: (b, s, nh, hd) x (b, t, nkv, hd); group q heads per kv
+    group = nh // nkv
+    q = q.reshape(b, s, nkv, group, hd)
+    logits = jnp.einsum("bsngh,btnh->bnsgt", q.astype(jnp.float32) if False else q,
+                        k_all, preferred_element_type=jnp.float32)
+    logits = logits * (hd ** -0.5)
+    if causal and cache is None:
+        qpos = positions[..., :, None]           # (b, s, 1)
+        kpos = jnp.arange(kv_len)[None, None, :]  # (1, 1, t)
+        cmask = kpos <= qpos                     # (b, s, t)
+        logits = jnp.where(cmask[:, None, :, None, :], logits, -1e30)
+    if valid is not None:
+        logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, :, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_all.dtype)
+    out = jnp.einsum("bnsgt,btnh->bsngh", probs, v_all,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(b, s, nh * hd)
+    out = pmatmul(out, p["wo"], "attn_out", policy)
+    return constrain(out, "batch", "seq", None), new_cache
+
+
+def init_cross_attention(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    hd = cfg.head_dim
+    return {
+        "wq": init_dense(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": init_dense(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": init_dense(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": init_dense(ks[3], cfg.n_heads * hd, cfg.d_model, dtype),
+        "gate": jnp.zeros((1,), dtype),  # zero-init tanh gate (llama-3.2 style)
+    }
+
+
+def cross_attention(p, x, kv_embeds, cfg, *, policy=None):
+    """Cross-attention onto (precomputed) modality embeddings."""
+    b, s, _ = x.shape
+    t = kv_embeds.shape[1]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(pmatmul(x, p["wq"], "attn_qkv", policy), nh, hd)
+    k = _split_heads(pmatmul(kv_embeds, p["wk"], "attn_qkv", policy), nkv, hd)
+    v = _split_heads(pmatmul(kv_embeds, p["wv"], "attn_qkv", policy), nkv, hd)
+    group = nh // nkv
+    q = q.reshape(b, s, nkv, group, hd)
+    logits = jnp.einsum("bsngh,btnh->bnsgt", q, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnsgt,btnh->bsngh", probs, v,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(b, s, nh * hd)
+    out = pmatmul(out, p["wo"], "attn_out", policy)
+    return jnp.tanh(p["gate"]) * out
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(ks[0], d_model, d_ff, dtype),
+        "w_up": init_dense(ks[1], d_model, d_ff, dtype),
+        "w_down": init_dense(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp(p, x, *, policy=None):
+    """SwiGLU feed-forward."""
+    g = pmatmul(x, p["w_gate"], "mlp_in", policy)
+    u = pmatmul(x, p["w_up"], "mlp_in", policy)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "batch", "seq", "ffn")
+    return pmatmul(h, p["w_down"], "mlp_out", policy)

@@ -1,0 +1,134 @@
+"""Mamba2 block (SSD — state space dual), built on the shared chunkwise
+linear-attention core (ssm.py): scalar-per-head decay a_t = exp(dt * A),
+B/C play the roles of k/q, dt-scaled x the role of v.
+
+Includes the depthwise causal conv (kernel ssm_conv) with a rolling conv
+state for decode.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .policy import pmatmul
+from .ssm import SSMState, chunked_linear_attention, linear_attention_step
+
+__all__ = ["init_mamba2", "mamba2_block", "mamba2_step", "Mamba2State"]
+
+
+class Mamba2State(NamedTuple):
+    ssm: SSMState          # (b, h, d_state, head_dim)
+    conv: jnp.ndarray      # (b, conv-1, conv_channels)
+
+
+def _conv_channels(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    return di + 2 * cfg.ssm_state * cfg.n_heads
+
+
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 5)
+    cc = _conv_channels(cfg)
+    return {
+        # in_proj -> [z (gate, di), xBC (conv channels), dt (h)]
+        "w_in": L.init_dense(ks[0], d, di + cc + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, cc), jnp.float32)
+                   * (1.0 / cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((cc,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": L.init_norm(di, dtype),
+        "w_out": L.init_dense(ks[2], di, d, dtype),
+    }
+
+
+def _split_in(p, x, cfg, policy):
+    di = cfg.ssm_expand * cfg.d_model
+    cc = _conv_channels(cfg)
+    h = cfg.n_heads
+    proj = pmatmul(x, p["w_in"], "mlp_in", policy)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + cc]
+    dt = proj[..., di + cc:]
+    return z, xbc, dt, di, cc, h
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv along seq. xbc: (b, t, c); w: (k, c)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)              # (b, t+k-1, c)
+    out = sum(full[:, i:full.shape[1] - (k - 1 - i)] * w[i][None, None, :]
+              for i in range(k))
+    new_state = full[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(out + b[None, None, :]), new_state
+
+
+def _ssd_qkv(xbc, dt, p, cfg):
+    b, t, _ = xbc.shape
+    h, ds = cfg.n_heads, cfg.ssm_state
+    di = cfg.ssm_expand * cfg.d_model
+    hd = di // h
+    xs = xbc[..., :di].reshape(b, t, h, hd)
+    bmat = xbc[..., di:di + h * ds].reshape(b, t, h, ds)
+    cmat = xbc[..., di + h * ds:].reshape(b, t, h, ds)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b, t, h)
+    a = -jnp.exp(p["a_log"])                                      # (h,)
+    log_decay = dt * a[None, None, :]                             # <= 0
+    v = xs.astype(jnp.float32) * dt[..., None]                    # dt-scaled input
+    return (cmat.astype(jnp.float32), bmat.astype(jnp.float32), v,
+            log_decay, xs, hd)
+
+
+def mamba2_block(p, x, cfg, *, policy=None, chunk=256, state=None):
+    b, t, d = x.shape
+    z, xbc, dt, di, cc, h = _split_in(p, x, cfg, policy)
+    conv_state = state.conv if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    q, k, v, log_a, xs, hd = _ssd_qkv(xbc, dt, p, cfg)
+    y, new_ssm = chunked_linear_attention(
+        q, k, v, log_a, chunk=min(chunk, max(t, 16)),
+        init_state=state.ssm if state is not None else None, normalize=False)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = pmatmul(y, p["w_out"], "mlp_out", policy)
+    return out, Mamba2State(new_ssm, new_conv)
+
+
+def mamba2_step(p, x, cfg, state: Mamba2State, *, policy=None):
+    """Decode: x (b, 1, d)."""
+    b = x.shape[0]
+    z, xbc, dt, di, cc, h = _split_in(p, x, cfg, policy)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], state.conv)
+    q, k, v, log_a, xs, hd = _ssd_qkv(xbc, dt, p, cfg)
+    new_ssm, y = linear_attention_step(
+        state.ssm, q[:, 0], k[:, 0], v[:, 0], log_a[:, 0], normalize=False)
+    y = y + xs[:, 0].astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = pmatmul(y, p["w_out"], "mlp_out", policy)
+    return out, Mamba2State(new_ssm, new_conv)
+
+
+def init_mamba2_state(cfg, batch: int, dtype=jnp.float32):
+    h, ds = cfg.n_heads, cfg.ssm_state
+    di = cfg.ssm_expand * cfg.d_model
+    hd = di // h
+    cc = _conv_channels(cfg)
+    return Mamba2State(
+        SSMState(jnp.zeros((batch, h, ds, hd), jnp.float32),
+                 jnp.zeros((batch, h, ds), jnp.float32)),
+        jnp.zeros((batch, cfg.ssm_conv - 1, cc), dtype),
+    )

@@ -1,0 +1,545 @@
+"""Family dispatch: one API over all ten assigned architectures.
+
+  init_params(cfg, key)                     -> param pytree
+  train_loss(params, cfg, batch)            -> scalar loss (+ aux)
+  forward_logits(params, cfg, batch)        -> logits (prefill / encode)
+  init_decode_state(cfg, batch, max_len)    -> cache pytree
+  decode_step(params, cfg, state, tok, pos) -> (logits, state)
+  input_specs(cfg, shape)                   -> ShapeDtypeStruct batch for dryrun
+  param_logical_axes(cfg, params)           -> logical-axis names pytree
+
+Families:
+  dense          stacked scanned transformer blocks
+  moe            transformer w/ MoE FFN every layer (+ shared experts)
+  ssm (xlstm)    mLSTM blocks w/ sLSTM every cfg.slstm_every (scan groups)
+  hybrid (zamba) Mamba2 blocks w/ ONE shared attn+mlp block every attn_every
+  vlm            dense + cross-attention every cross_attn_every (stub images)
+  audio          encoder-only (stub frame embeddings), CE over units
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+from . import layers as L
+from . import mamba2 as M2
+from . import moe as MOE
+from . import ssm as SSM
+from . import transformer as TF
+from .policy import pmatmul
+
+__all__ = [
+    "init_params", "train_loss", "forward_logits", "init_decode_state",
+    "decode_step", "input_specs", "param_logical_axes",
+]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    if cfg.family in ("dense", "audio"):
+        return TF.init_params(cfg, key, dtype)
+    if cfg.family == "moe":
+        return _moe_init(cfg, key, dtype)
+    if cfg.family == "ssm":
+        return _xlstm_init(cfg, key, dtype)
+    if cfg.family == "hybrid":
+        return _zamba_init(cfg, key, dtype)
+    if cfg.family == "vlm":
+        return _vlm_init(cfg, key, dtype)
+    raise ValueError(cfg.family)
+
+
+def _moe_init(cfg, key, dtype):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+
+    def block(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn_norm": L.init_norm(cfg.d_model, dtype),
+            "attn": L.init_attention(k1, cfg, dtype=dtype),
+            "mlp_norm": L.init_norm(cfg.d_model, dtype),
+            "moe": MOE.init_moe(k2, cfg, dtype),
+        }
+
+    blocks = [block(keys[i]) for i in range(cfg.n_layers)]
+    return {
+        "embed": L.init_dense(keys[-2], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "final_norm": L.init_norm(cfg.d_model, dtype),
+        "lm_head": L.init_dense(keys[-1], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _xlstm_init(cfg, key, dtype):
+    n_groups = cfg.n_layers // cfg.slstm_every
+    keys = jax.random.split(key, n_groups + 2)
+
+    def group(k):
+        ks = jax.random.split(k, cfg.slstm_every)
+        mblocks = [
+            {"norm": L.init_norm(cfg.d_model, dtype),
+             "mlstm": SSM.init_mlstm(ks[i], cfg, dtype)}
+            for i in range(cfg.slstm_every - 1)
+        ]
+        return {
+            "mlstm_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *mblocks),
+            "slstm_norm": L.init_norm(cfg.d_model, dtype),
+            "slstm": SSM.init_slstm(ks[-1], cfg, dtype),
+        }
+
+    groups = [group(keys[i]) for i in range(n_groups)]
+    return {
+        "embed": L.init_dense(keys[-2], cfg.vocab_size, cfg.d_model, dtype),
+        "groups": jax.tree.map(lambda *xs: jnp.stack(xs), *groups),
+        "final_norm": L.init_norm(cfg.d_model, dtype),
+        "lm_head": L.init_dense(keys[-1], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _zamba_init(cfg, key, dtype):
+    n_groups = cfg.n_layers // cfg.attn_every
+    keys = jax.random.split(key, n_groups + 3)
+
+    def group(k):
+        ks = jax.random.split(k, cfg.attn_every)
+        mb = [
+            {"norm": L.init_norm(cfg.d_model, dtype),
+             "mamba": M2.init_mamba2(ks[i], cfg, dtype)}
+            for i in range(cfg.attn_every)
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *mb)
+
+    groups = [group(keys[i]) for i in range(n_groups)]
+    k1, k2 = jax.random.split(keys[-3])
+    return {
+        "embed": L.init_dense(keys[-2], cfg.vocab_size, cfg.d_model, dtype),
+        "groups": jax.tree.map(lambda *xs: jnp.stack(xs), *groups),
+        # ONE shared transformer block applied after every group
+        "shared": TF.init_block(k1, cfg, dtype),
+        "final_norm": L.init_norm(cfg.d_model, dtype),
+        "lm_head": L.init_dense(keys[-1], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _vlm_init(cfg, key, dtype):
+    n_groups = cfg.n_layers // cfg.cross_attn_every
+    keys = jax.random.split(key, n_groups + 2)
+
+    def group(k):
+        ks = jax.random.split(k, cfg.cross_attn_every + 1)
+        blocks = [TF.init_block(ks[i], cfg, dtype)
+                  for i in range(cfg.cross_attn_every)]
+        return {
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+            "xattn_norm": L.init_norm(cfg.d_model, dtype),
+            "xattn": L.init_cross_attention(ks[-1], cfg, dtype),
+        }
+
+    groups = [group(keys[i]) for i in range(n_groups)]
+    return {
+        "embed": L.init_dense(keys[-2], cfg.vocab_size, cfg.d_model, dtype),
+        "groups": jax.tree.map(lambda *xs: jnp.stack(xs), *groups),
+        "final_norm": L.init_norm(cfg.d_model, dtype),
+        "lm_head": L.init_dense(keys[-1], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill / encode)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, mode):
+    if mode == "full":
+        return jax.checkpoint(fn)
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def forward_logits(params, cfg, batch, *, policy=None, remat: str = "none"):
+    """batch: dict with 'tokens' (b, s) [or 'features' for audio] and
+
+    optionally 'image_embeds' (b, n_img, d) for vlm.  Returns (logits, aux).
+    """
+    aux = jnp.float32(0.0)
+    if cfg.family in ("dense",):
+        return TF.forward(params, cfg, batch["tokens"], policy=policy,
+                          remat=remat), aux
+    if cfg.family == "audio":
+        x = batch["features"]  # (b, s, d) stub frame embeddings
+        return TF.forward(params, cfg, x, policy=policy, remat=remat,
+                          causal=False), aux
+    if cfg.family == "moe":
+        return _moe_forward(params, cfg, batch["tokens"], policy, remat)
+    if cfg.family == "ssm":
+        return _xlstm_forward(params, cfg, batch["tokens"], policy, remat), aux
+    if cfg.family == "hybrid":
+        return _zamba_forward(params, cfg, batch["tokens"], policy, remat), aux
+    if cfg.family == "vlm":
+        return _vlm_forward(params, cfg, batch["tokens"],
+                            batch["image_embeds"], policy, remat), aux
+    raise ValueError(cfg.family)
+
+
+def _moe_forward(params, cfg, tokens, policy, remat):
+    b, s = tokens.shape
+    x = TF.embed_tokens(params, cfg, tokens, policy)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, block):
+        x, aux = carry
+        h, _ = L.attention(
+            block["attn"], L.rmsnorm(x, block["attn_norm"], cfg.norm_eps), cfg,
+            positions=positions, policy=policy)
+        x = x + h
+        mo, a = MOE.moe_layer(
+            block["moe"], L.rmsnorm(x, block["mlp_norm"], cfg.norm_eps), cfg,
+            policy=policy)
+        return (x + mo, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(_remat(body, remat),
+                               (x, jnp.float32(0.0)), params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return TF.unembed(params, cfg, x, policy), aux / cfg.n_layers
+
+
+def _xlstm_forward(params, cfg, tokens, policy, remat):
+    x = TF.embed_tokens(params, cfg, tokens, policy)
+
+    def group_body(x, group):
+        def mblock(x, blk):
+            h, _ = SSM.mlstm_block(
+                blk["mlstm"], L.rmsnorm(x, blk["norm"], cfg.norm_eps), cfg,
+                policy=policy)
+            return x + h, None
+
+        x, _ = jax.lax.scan(mblock, x, group["mlstm_blocks"])
+        h, _ = SSM.slstm_block(
+            params_group_slstm(group), L.rmsnorm(x, group["slstm_norm"], cfg.norm_eps),
+            cfg, policy=policy)
+        return x + h, None
+
+    def params_group_slstm(group):
+        return group["slstm"]
+
+    x, _ = jax.lax.scan(_remat(group_body, remat), x, params["groups"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return TF.unembed(params, cfg, x, policy)
+
+
+def _zamba_forward(params, cfg, tokens, policy, remat):
+    b, s = tokens.shape
+    x = TF.embed_tokens(params, cfg, tokens, policy)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    shared = params["shared"]
+
+    def group_body(x, group):
+        def mblock(x, blk):
+            h, _ = M2.mamba2_block(
+                blk["mamba"], L.rmsnorm(x, blk["norm"], cfg.norm_eps), cfg,
+                policy=policy)
+            return x + h, None
+
+        x, _ = jax.lax.scan(mblock, x, group)
+        # shared attention block (same params every group: zamba2)
+        x = TF._block_apply(cfg, policy, shared, x, positions=positions,
+                            mask=None, cache=None, cache_pos=None,
+                            causal=True)[0]
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(group_body, remat), x, params["groups"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return TF.unembed(params, cfg, x, policy)
+
+
+def _vlm_forward(params, cfg, tokens, image_embeds, policy, remat):
+    b, s = tokens.shape
+    x = TF.embed_tokens(params, cfg, tokens, policy)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def group_body(x, group):
+        def block(x, blk):
+            return TF._block_apply(cfg, policy, blk, x, positions=positions,
+                                   mask=None, cache=None, cache_pos=None,
+                                   causal=True)[0], None
+
+        x, _ = jax.lax.scan(block, x, group["blocks"])
+        h = L.cross_attention(
+            group["xattn"], L.rmsnorm(x, group["xattn_norm"], cfg.norm_eps),
+            image_embeds, cfg, policy=policy)
+        return x + h, None
+
+    x, _ = jax.lax.scan(_remat(group_body, remat), x, params["groups"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return TF.unembed(params, cfg, x, policy)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params, cfg, batch, *, policy=None, remat: str = "none",
+               aux_weight: float = 0.01):
+    logits, aux = forward_logits(params, cfg, batch, policy=policy, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(ll))
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.family in ("dense", "moe"):
+        return TF.init_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "vlm":
+        return TF.init_cache(cfg, batch, max_len, dtype)  # self-attn caches
+    if cfg.family == "ssm":
+        n_groups = cfg.n_layers // cfg.slstm_every
+        di = cfg.ssm_expand * cfg.d_model
+        h = cfg.n_heads
+        hd = di // h
+        return {
+            "mlstm": SSM.SSMState(
+                jnp.zeros((n_groups, cfg.slstm_every - 1, batch, h, hd, hd), jnp.float32),
+                jnp.zeros((n_groups, cfg.slstm_every - 1, batch, h, hd), jnp.float32)),
+            "slstm": tuple(
+                jnp.zeros((n_groups, batch, di), jnp.float32) for _ in range(3)),
+        }
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        base = M2.init_mamba2_state(cfg, batch)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None, None], (n_groups, cfg.attn_every) + x.shape), base)
+        kv = TF.init_cache(cfg, batch, max_len, dtype)
+        shared_kv = L.KVCache(kv.k[:n_groups], kv.v[:n_groups])
+        return {"mamba": stacked, "shared_kv": shared_kv}
+    raise ValueError(f"{cfg.family} does not support decode")
+
+
+def decode_step(params, cfg, state, tokens, pos, *, policy=None):
+    """tokens (b, 1), pos scalar -> (logits (b, vocab), new state)."""
+    if cfg.family == "dense":
+        return TF.decode_step(params, cfg, state, tokens, pos, policy=policy)
+    if cfg.family == "moe":
+        return _moe_decode(params, cfg, state, tokens, pos, policy)
+    if cfg.family == "ssm":
+        return _xlstm_decode(params, cfg, state, tokens, pos, policy)
+    if cfg.family == "hybrid":
+        return _zamba_decode(params, cfg, state, tokens, pos, policy)
+    if cfg.family == "vlm":
+        return _vlm_decode(params, cfg, state, tokens, pos, policy)
+    raise ValueError(f"{cfg.family} does not support decode")
+
+
+def _moe_decode(params, cfg, cache, tokens, pos, policy):
+    b = tokens.shape[0]
+    x = TF.embed_tokens(params, cfg, tokens, policy)
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+
+    def body(x, blk_cache):
+        block, (k, v) = blk_cache
+        h, new_c = L.attention(
+            block["attn"], L.rmsnorm(x, block["attn_norm"], cfg.norm_eps), cfg,
+            positions=positions, cache=L.KVCache(k, v), cache_pos=pos,
+            causal=False, policy=policy)
+        x = x + h
+        mo, _ = MOE.moe_layer(
+            block["moe"], L.rmsnorm(x, block["mlp_norm"], cfg.norm_eps), cfg,
+            policy=policy)
+        return x + mo, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], tuple(cache)))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return TF.unembed(params, cfg, x, policy)[:, 0], L.KVCache(*new_cache)
+
+
+def _xlstm_decode(params, cfg, state, tokens, pos, policy):
+    x = TF.embed_tokens(params, cfg, tokens, policy)
+
+    def group_body(x, scans):
+        group, m_state, s_state = scans
+
+        def mblock(x, blk_state):
+            blk, st = blk_state
+            h, new_st = SSM.mlstm_step(
+                blk["mlstm"], L.rmsnorm(x, blk["norm"], cfg.norm_eps), cfg,
+                SSM.SSMState(*st), policy=policy)
+            return x + h, tuple(new_st)
+
+        x, new_m = jax.lax.scan(mblock, x,
+                                (group["mlstm_blocks"], tuple(m_state)))
+        h, new_s = SSM.slstm_step(
+            group["slstm"], L.rmsnorm(x, group["slstm_norm"], cfg.norm_eps),
+            cfg, s_state, policy=policy)
+        return x + h, (new_m, new_s)
+
+    x, (new_m, new_s) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], tuple(state["mlstm"]), state["slstm"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = TF.unembed(params, cfg, x, policy)
+    return logits[:, 0], {"mlstm": SSM.SSMState(*new_m), "slstm": new_s}
+
+
+def _zamba_decode(params, cfg, state, tokens, pos, policy):
+    b = tokens.shape[0]
+    x = TF.embed_tokens(params, cfg, tokens, policy)
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    shared = params["shared"]
+
+    def group_body(x, scans):
+        group, m_state, (k, v) = scans
+
+        def mblock(x, blk_state):
+            blk, st = blk_state
+            h, new_st = M2.mamba2_step(
+                blk["mamba"], L.rmsnorm(x, blk["norm"], cfg.norm_eps), cfg,
+                M2.Mamba2State(SSM.SSMState(st[0], st[1]), st[2]),
+                policy=policy)
+            return x + h, (new_st.ssm.s, new_st.ssm.n, new_st.conv)
+
+        x, new_m = jax.lax.scan(
+            mblock, x,
+            (group, (m_state.ssm.s, m_state.ssm.n, m_state.conv)))
+        x, new_kv = TF._block_apply(
+            cfg, policy, shared, x, positions=positions, mask=None,
+            cache=L.KVCache(k, v), cache_pos=pos, causal=False)
+        return x, (new_m, new_kv)
+
+    x, (new_m, new_kv) = jax.lax.scan(
+        group_body, x,
+        (params["groups"],
+         state["mamba"],
+         tuple(state["shared_kv"])))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = TF.unembed(params, cfg, x, policy)
+    new_mamba = M2.Mamba2State(SSM.SSMState(new_m[0], new_m[1]), new_m[2])
+    return logits[:, 0], {"mamba": new_mamba, "shared_kv": L.KVCache(*new_kv)}
+
+
+def _vlm_decode(params, cfg, cache, tokens, pos, policy):
+    # decode attends to text KV caches only (image context is baked into
+    # the caches during prefill; the cross-attn contribution at decode uses
+    # the stub embeddings statically — simplification documented)
+    b = tokens.shape[0]
+    x = TF.embed_tokens(params, cfg, tokens, policy)
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    n_per = cfg.cross_attn_every
+    n_groups = cfg.n_layers // n_per
+    k_all, v_all = cache
+    # reshape layer-stacked cache into groups
+    kg = k_all.reshape(n_groups, n_per, *k_all.shape[1:])
+    vg = v_all.reshape(n_groups, n_per, *v_all.shape[1:])
+
+    def group_body(x, scans):
+        group, kk, vv = scans
+
+        def block(x, blk_kv):
+            blk, (k, v) = blk_kv
+            x, new_c = TF._block_apply(cfg, policy, blk, x,
+                                       positions=positions, mask=None,
+                                       cache=L.KVCache(k, v), cache_pos=pos,
+                                       causal=False)
+            return x, new_c
+
+        x, new_kv = jax.lax.scan(block, x, (group["blocks"], (kk, vv)))
+        return x, new_kv
+
+    x, (nk, nv) = jax.lax.scan(group_body, x, (params["groups"], kg, vg))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = TF.unembed(params, cfg, x, policy)
+    new_cache = L.KVCache(nk.reshape(k_all.shape), nv.reshape(v_all.shape))
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins) + logical axes
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg, shape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            batch = {
+                "features": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        else:
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_modality_tokens, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+    return batch
+
+
+def param_logical_axes(cfg, params):
+    """Logical axis names per parameter leaf (for sharding rules)."""
+
+    def axes_for(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = names[-1]
+        nd = leaf.ndim
+        stacked = ("layers" in names or "groups" in names or
+                   "mlstm_blocks" in names or "blocks" in names)
+        lead = ["layers"] * (nd - 2) if stacked else []
+        # normalization / bias vectors
+        if nd - len(lead) == 1:
+            return tuple(lead + ["norm"])
+        if name == "embed":
+            return tuple(lead + ["vocab", "embed"])
+        if name == "lm_head":
+            return tuple(lead + ["embed", "vocab"])
+        if name in ("wq", "wk", "wv", "w_in", "w_up", "w_gate", "w_if"):
+            return tuple(lead + ["embed", "heads"])
+        if name in ("wo", "w_down", "w_out"):
+            return tuple(lead + ["heads", "embed"])
+        if name == "router":
+            return tuple(lead + ["embed", None])
+        if name == "conv_w":
+            return tuple(lead + ["conv", None])
+        if name == "r":
+            return tuple(lead + [None, None])
+        return tuple(lead + [None] * (nd - len(lead)))
+
+    def axes_for_moe(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = names[-1]
+        if name in ("w_gate", "w_up", "w_down") and "moe" in names:
+            lead = ["layers"] * (leaf.ndim - 3)
+            return tuple(lead + ["experts", "embed" if name != "w_down" else "expert_ffn",
+                                 "expert_ffn" if name != "w_down" else "embed"])
+        return axes_for(path, leaf)
+
+    return jax.tree_util.tree_map_with_path(
+        axes_for_moe if cfg.family == "moe" else axes_for, params)

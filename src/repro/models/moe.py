@@ -1,0 +1,94 @@
+"""Mixture-of-Experts layer: token-choice routing with per-expert capacity.
+
+Routing: softmax gate -> top-k experts per token; each expert then keeps its
+top-C tokens by gate weight (capacity C = tokens * k / E * capacity_factor),
+dropping overflow (standard capacity-based dropping MoE).  Dispatch/combine
+are gather/scatter-add over (E, C) index tables — no (T, E, C) one-hot
+tensors, so the memory footprint is O(E*C*d) and shards cleanly: experts
+(and the (E, C, d) dispatch buffers) ride the "model"/EP axis, tokens the
+"data" axis.  Under GSPMD the dispatch gather lowers to the expert-parallel
+all-to-all-equivalent collective; see EXPERIMENTS.md §Perf for the measured
+collective cost and the shard_map alternative.
+
+Router logits run in f32 by default (policy site "router") — low-precision
+routers are a known training instability; with the paper's engine the site
+can be pushed to binary128-class ("dd") for bitwise-reproducible routing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+from . import layers as L
+from .policy import pmatmul
+
+__all__ = ["init_moe", "moe_layer"]
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+    p = {
+        "router": L.init_dense(ks[0], d, e, dtype),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * scale_out).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], d, cfg.d_ff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def moe_layer(p, x, cfg, *, policy=None):
+    """x: (batch, seq, d). Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.experts_per_token
+    xf = x.reshape(t, d)
+
+    logits = pmatmul(xf, p["router"], "router", policy)        # (t, e) f32
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)                   # (t, k)
+    top_w = top_w / jnp.clip(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style); pin f32 (one_hot defaults to
+    # f64 when x64 is enabled, which breaks scan carry dtypes)
+    density = jnp.mean(jax.nn.one_hot(top_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    mean_probs = probs.mean(axis=0)
+    aux_loss = (e * jnp.sum(density * mean_probs)).astype(jnp.float32)
+
+    # per-(token, expert) weight table, then per-expert top-C capacity
+    cap = int(max(1, (t * k) / e * cfg.capacity_factor))
+    weights_te = jax.vmap(
+        lambda w, i: jnp.zeros((e,), probs.dtype).at[i].set(w)
+    )(top_w, top_idx)                                          # (t, e) sparse-dense
+
+    ew = weights_te.T                                          # (e, t)
+    cap_w, cap_idx = jax.lax.top_k(ew, cap)                    # (e, cap)
+    keep = cap_w > 0
+
+    # dispatch: gather tokens to (e, cap, d) expert buffers
+    disp = xf[cap_idx]                                         # (e, cap, d)
+    disp = constrain(disp, "experts", None, None)
+    h_g = jnp.einsum("ecd,edf->ecf", disp, p["w_gate"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    h_u = jnp.einsum("ecd,edf->ecf", disp, p["w_up"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    h = jax.nn.silu(h_g) * h_u
+    h = constrain(h, "experts", None, None)
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # combine: weighted scatter-add back to token order
+    w_keep = jnp.where(keep, cap_w, 0.0).astype(x.dtype)       # (e, cap)
+    contrib = y_e * w_keep[..., None]
+    out = jnp.zeros((t, d), x.dtype).at[cap_idx.reshape(-1)].add(
+        contrib.reshape(-1, d))
+    out = out.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        out = out + L.mlp(p["shared"], x, policy=policy)
+    return out, aux_loss

@@ -1,0 +1,74 @@
+"""Precision policy: the paper's technique as a first-class model feature.
+
+Every dense projection in the model stack calls ``pmatmul(x, w, site,
+policy)``.  A policy maps site names to precision modes:
+
+  native — matmul in the parameter dtype with f32 accumulation (default)
+  f32    — operands cast to f32 (e.g. router logits, a known MoE
+           instability)
+  dd     — binary128-class GEMM via the Ozaki engine (core/ozaki.py):
+           operands are promoted to double-word, the product is computed
+           with error-free slice GEMMs, and the result is returned in f32.
+           Gradients flow through a straight-through f32 VJP (the extended
+           precision is a forward-accuracy feature: logit/loss drift kills
+           long-run reproducibility, not gradient quality).
+
+Sites: attn_qkv, attn_out, mlp_in, mlp_out, router, lm_head, embed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pmatmul", "PrecisionPolicy", "DEFAULT_POLICY"]
+
+PrecisionPolicy = Mapping[str, str]
+
+DEFAULT_POLICY: dict = {}  # empty -> native everywhere
+
+
+@jax.custom_vjp
+def _dd_matmul_st(x32, w32):
+    """f32 matmul computed through the binary128-class Ozaki engine."""
+    from repro.core import dd, ozaki
+
+    xdd = dd.from_float(x32.astype(jnp.float64))
+    wdd = dd.from_float(w32.astype(jnp.float64))
+    out = ozaki.ozaki_gemm(xdd, wdd)
+    return dd.to_float(out).astype(jnp.float32)
+
+
+def _dd_fwd(x32, w32):
+    return _dd_matmul_st(x32, w32), (x32, w32)
+
+
+def _dd_bwd(res, g):
+    x32, w32 = res
+    return (g @ w32.T, x32.T @ g)
+
+
+_dd_matmul_st.defvjp(_dd_fwd, _dd_bwd)
+
+
+def pmatmul(x, w, site: str, policy: Optional[PrecisionPolicy] = None):
+    """Dense projection with per-site precision selection.
+
+    x: (..., d_in), w: (d_in, d_out).
+    """
+    mode = (policy or DEFAULT_POLICY).get(site, "native")
+    if mode == "native":
+        return jnp.einsum("...d,df->...f", x, w,
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    if mode == "f32":
+        return jnp.einsum("...d,df->...f", x.astype(jnp.float32),
+                          w.astype(jnp.float32))
+    if mode == "dd":
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        out = _dd_matmul_st(x2, w.astype(jnp.float32))
+        return out.reshape(*lead, w.shape[-1])
+    raise ValueError(f"unknown precision mode {mode!r} for site {site!r}")

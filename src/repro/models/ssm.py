@@ -1,0 +1,242 @@
+"""Linear-recurrent sequence mixing: a chunkwise core shared by mLSTM (xLSTM)
+and Mamba2 (SSD) — both are gated linear attention with per-step scalar decay:
+
+    S_t = a_t * S_{t-1} + k_t v_t^T          (state (d_k, d_v) per head)
+    y_t = q_t^T S_t
+
+The chunkwise-parallel form splits the sequence into chunks: within a chunk
+a masked decay-weighted attention matrix (quadratic in chunk size), across
+chunks a lax.scan carries the state — O(T * chunk) work, O(T/chunk) scan
+steps, and O(1) state for decode.  This is the sub-quadratic path that makes
+the 500k-token cells runnable (DESIGN.md §5).
+
+mLSTM here is the stabilized-lite variant: exponential input gate folded
+into a per-chunk max-normalizer, sigmoid forget gate, q/k/v heads + RMS
+output norm (simplifications documented in DESIGN.md).  sLSTM blocks use a
+per-timestep lax.scan recurrence (block-diagonal per head).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+from . import layers as L
+from .policy import pmatmul
+
+__all__ = [
+    "chunked_linear_attention",
+    "linear_attention_step",
+    "init_mlstm",
+    "mlstm_block",
+    "mlstm_step",
+    "init_slstm",
+    "slstm_block",
+    "slstm_step",
+    "SSMState",
+]
+
+
+class SSMState(NamedTuple):
+    s: jnp.ndarray  # (batch, heads, d_k, d_v) matrix memory
+    n: jnp.ndarray  # (batch, heads, d_k) normalizer memory
+
+
+def chunked_linear_attention(q, k, v, log_a, *, chunk: int = 256,
+                             init_state: SSMState | None = None,
+                             normalize: bool = True):
+    """Gated linear attention, chunkwise-parallel.
+
+    q, k, v: (b, t, h, d_k/d_k/d_v); log_a: (b, t, h) per-step log decay
+    (<= 0).  Returns (y (b, t, h, d_v), final SSMState).
+    """
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    if t % chunk:
+        pad = chunk - t % chunk
+        q, k, v = (jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))) for x in (q, k, v))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+    tp = q.shape[1]
+    nc = tp // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:])
+
+    qc, kc, vc, lac = map(to_chunks, (q, k, v, log_a))
+    # cumulative decay within chunk: A_i = sum_{j<=i} log_a_j
+    cum = jnp.cumsum(lac, axis=2)                      # (b, nc, c, h)
+    total = cum[:, :, -1:, :]                          # (b, nc, 1, h)
+
+    s0 = init_state.s if init_state is not None else \
+        jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = init_state.n if init_state is not None else \
+        jnp.zeros((b, h, dk), jnp.float32)
+
+    def chunk_step(carry, xs):
+        s, n = carry                                   # (b,h,dk,dv), (b,h,dk)
+        qi, ki, vi, cumi, toti = xs                    # (b,c,h,*)
+        # intra-chunk: masked decay attention
+        # decay from j to i: exp(cum_i - cum_j), j <= i.  Mask BEFORE the
+        # exp: where(mask, exp(pos_big), 0) still back-propagates NaN from
+        # the inf forward value (observed on zamba2 grads).
+        dmat = cumi[:, :, None, :] - cumi[:, None, :, :]      # (b, c, c, h)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(mask[None, :, :, None], dmat, -1e30)
+        w = jnp.exp(dmat)
+        att = jnp.einsum("bihd,bjhd->bijh", qi, ki) * w       # (b,c,c,h)
+        y_intra = jnp.einsum("bijh,bjhe->bihe", att, vi)
+        # inter-chunk: contribution of carried state
+        qdec = qi * jnp.exp(cumi)[..., None]                  # (b,c,h,dk)
+        y_inter = jnp.einsum("bchd,bhde->bche", qdec, s)
+        y = y_intra + y_inter
+        if normalize:
+            # normalizer q.n: the intra part is the att row-sum
+            n_inter = jnp.einsum("bchd,bhd->bch", qdec, n)
+            denom = jnp.abs(att.sum(axis=2) + n_inter)
+            y = y / jnp.maximum(denom, 1.0)[..., None]
+        # state update: S' = a_total * S + sum_j exp(total - cum_j) k_j v_j^T
+        kdec = ki * jnp.exp(toti - cumi)[..., None]           # (b,c,h,dk)
+        s_new = jnp.exp(toti[:, -1])[..., None, None] * s + \
+            jnp.einsum("bchd,bche->bhde", kdec, vi)
+        n_new = jnp.exp(toti[:, -1])[..., None] * n + kdec.sum(axis=1)
+        return (s_new, n_new), y
+
+    xs = (
+        jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(cum, 1, 0), jnp.moveaxis(total, 1, 0),
+    )
+    (s_f, n_f), ys = jax.lax.scan(chunk_step, (s0, n0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, tp, h, dv)[:, :t]
+    return y, SSMState(s_f, n_f)
+
+
+def linear_attention_step(state: SSMState, q, k, v, log_a, *, normalize=True):
+    """Single-token recurrent step (decode). q/k/v: (b, h, d); log_a: (b, h)."""
+    a = jnp.exp(log_a)                                 # (b, h)
+    s = a[..., None, None] * state.s + k[..., :, None] * v[..., None, :]
+    n = a[..., None] * state.n + k
+    y = jnp.einsum("bhd,bhde->bhe", q, s)
+    if normalize:
+        denom = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+        y = y / jnp.maximum(denom, 1.0)[..., None]
+    return SSMState(s, n), y
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": L.init_dense(ks[0], d, 2 * di, dtype),     # x and gate paths
+        "wq": L.init_dense(ks[1], di, di, dtype),
+        "wk": L.init_dense(ks[2], di, di, dtype),
+        "wv": L.init_dense(ks[3], di, di, dtype),
+        "w_if": L.init_dense(ks[4], di, 2 * h, dtype),     # input+forget gates
+        "out_norm": L.init_norm(di, dtype),
+        "w_down": L.init_dense(ks[5], di, d, dtype),
+    }
+
+
+def _mlstm_qkv(p, x, cfg, policy):
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    di = cfg.ssm_expand * cfg.d_model
+    hd = di // h
+    up = pmatmul(x, p["w_up"], "mlp_in", policy)
+    xin, gate = jnp.split(up, 2, axis=-1)
+    q = pmatmul(xin, p["wq"], "attn_qkv", policy).reshape(b, t, h, hd)
+    k = pmatmul(xin, p["wk"], "attn_qkv", policy).reshape(b, t, h, hd) * hd ** -0.5
+    v = pmatmul(xin, p["wv"], "attn_qkv", policy).reshape(b, t, h, hd)
+    gates = pmatmul(xin, p["w_if"], "attn_qkv", policy).astype(jnp.float32)
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)      # (b, t, h)
+    log_a = jax.nn.log_sigmoid(f_gate)
+    k = k * jnp.exp(jnp.minimum(i_gate, 0.0))[..., None]  # bounded input gate
+    return q, k, v, log_a, gate, di, hd
+
+
+def mlstm_block(p, x, cfg, *, policy=None, chunk=256, state=None):
+    """x: (b, t, d) -> (b, t, d); parallel (train/prefill) form."""
+    b, t, _ = x.shape
+    q, k, v, log_a, gate, di, hd = _mlstm_qkv(p, x, cfg, policy)
+    y, new_state = chunked_linear_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        log_a, chunk=min(chunk, max(t, 16)), init_state=state)
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(gate)
+    return pmatmul(y, p["w_down"], "mlp_out", policy), new_state
+
+
+def mlstm_step(p, x, cfg, state: SSMState, *, policy=None):
+    """x: (b, 1, d) decode step."""
+    b = x.shape[0]
+    q, k, v, log_a, gate, di, hd = _mlstm_qkv(p, x, cfg, policy)
+    new_state, y = linear_attention_step(
+        state, q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+        v[:, 0].astype(jnp.float32), log_a[:, 0])
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(gate)
+    return pmatmul(y, p["w_down"], "mlp_out", policy), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar recurrence per head)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": L.init_dense(ks[0], d, 4 * di, dtype),   # z, i, f, o pre-acts
+        "r": (jax.random.normal(ks[1], (4, di), jnp.float32) * 0.1).astype(dtype),
+        "out_norm": L.init_norm(di, dtype),
+        "w_down": L.init_dense(ks[2], di, d, dtype),
+    }
+
+
+def _slstm_scan(pre, r, h0, c0, n0):
+    """pre: (b, t, 4, di) preactivations; diagonal recurrence weights r."""
+
+    def step(carry, x_t):
+        h, c, n = carry
+        z, i, f, o = (x_t[:, j] + r[j][None, :] * h for j in range(4))
+        i = jnp.exp(jnp.minimum(i, 0.0))
+        f = jax.nn.sigmoid(f)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (h, c, n), h
+
+    (h, c, n), hs = jax.lax.scan(step, (h0, c0, n0), jnp.moveaxis(pre, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), (h, c, n)
+
+
+def slstm_block(p, x, cfg, *, policy=None, state=None):
+    b, t, d = x.shape
+    di = cfg.ssm_expand * d
+    pre = pmatmul(x, p["w_in"], "mlp_in", policy).astype(jnp.float32)
+    pre = pre.reshape(b, t, 4, di)
+    if state is None:
+        z = jnp.zeros((b, di), jnp.float32)
+        state = (z, z, z)
+    hs, new_state = _slstm_scan(pre, p["r"].astype(jnp.float32), *state)
+    y = L.rmsnorm(hs.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    return pmatmul(y, p["w_down"], "mlp_out", policy), new_state
+
+
+def slstm_step(p, x, cfg, state, *, policy=None):
+    y, new_state = slstm_block(p, x, cfg, policy=policy, state=state)
+    return y, new_state

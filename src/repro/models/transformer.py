@@ -1,0 +1,134 @@
+"""Dense decoder LM (qwen3 / mistral / llama families) + encoder variant.
+
+Layers are weight-stacked and scanned (jax.lax.scan) so the HLO stays
+compact at 126 layers; remat policy applies per scanned block.  Decode uses
+per-layer KV caches stacked on a leading layer axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import constrain
+from . import layers as L
+from .policy import pmatmul
+
+__all__ = ["init_params", "forward", "init_cache", "decode_step"]
+
+
+def _remat(fn, mode: str):
+    if mode == "full":
+        return jax.checkpoint(fn)
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def init_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": L.init_norm(cfg.d_model, dtype),
+        "attn": L.init_attention(k1, cfg, dtype=dtype),
+        "mlp_norm": L.init_norm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = [init_block(keys[i], cfg, dtype) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    params = {
+        "embed": L.init_dense(keys[-2], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": stacked,
+        "final_norm": L.init_norm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(keys[-1], cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def _block_apply(cfg, policy, block, x, *, positions, mask, cache, cache_pos,
+                 causal):
+    if cache is None:
+        # Megatron-SP: residual stream sequence-sharded over the TP axis —
+        # the scan-remat saved activations shrink by the TP degree and the
+        # norms deduplicate; GSPMD inserts the AG/RS pair at the block edge
+        x = constrain(x, "batch", "seq_res", None)
+    h, new_cache = L.attention(
+        block["attn"], L.rmsnorm(x, block["attn_norm"], cfg.norm_eps), cfg,
+        positions=positions, mask=mask, cache=cache, cache_pos=cache_pos,
+        causal=causal, policy=policy)
+    x = x + h
+    x = x + L.mlp(block["mlp"], L.rmsnorm(x, block["mlp_norm"], cfg.norm_eps),
+                  policy=policy)
+    if cache is None:
+        x = constrain(x, "batch", "seq_res", None)
+    return x, new_cache
+
+
+def embed_tokens(params, cfg, tokens, policy=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return constrain(x, "batch", "seq", None)
+
+
+def unembed(params, cfg, x, policy=None):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = pmatmul(x, w, "lm_head", policy)
+    return constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")
+
+
+def forward(params, cfg, tokens, *, policy=None, remat: str = "none",
+            positions=None, causal: Optional[bool] = None):
+    """Full-sequence forward -> logits (train / prefill / encode)."""
+    causal = (not cfg.encoder_only) if causal is None else causal
+    b, s = tokens.shape[:2]
+    if tokens.ndim == 2 and jnp.issubdtype(tokens.dtype, jnp.integer):
+        x = embed_tokens(params, cfg, tokens, policy)
+    else:
+        # pre-embedded modality input (audio stub); match the param compute
+        # dtype so the layer-scan carry type is stable
+        x = tokens.astype(params["final_norm"].dtype)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, block):
+        x = _block_apply(cfg, policy, block, x, positions=positions,
+                         mask=None, cache=None, cache_pos=None, causal=causal)[0]
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(body, remat), x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, cfg, x, policy)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return L.KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def decode_step(params, cfg, cache: L.KVCache, tokens, pos, *, policy=None):
+    """One decode step: tokens (b, 1), pos scalar int32 (current position).
+
+    Returns (logits (b, vocab), new_cache).
+    """
+    b = tokens.shape[0]
+    x = embed_tokens(params, cfg, tokens, policy)
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+
+    def body(x, blk_and_cache):
+        block, (k, v) = blk_and_cache
+        x, new_c = _block_apply(cfg, policy, block, x, positions=positions,
+                                mask=None, cache=L.KVCache(k, v),
+                                cache_pos=pos, causal=False)
+        return x, new_c
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], tuple(cache)))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, cfg, x, policy)
+    return logits[:, 0], L.KVCache(*new_caches)

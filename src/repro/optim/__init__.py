@@ -1,0 +1,3 @@
+"""Optimizers: AdamW with int8 states and DD master-weight options."""
+
+from .adamw import make_optimizer, OptState  # noqa: F401

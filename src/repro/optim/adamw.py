@@ -1,0 +1,192 @@
+"""AdamW with production-scale state options.
+
+  adamw       — f32 m/v states.
+  adamw_int8  — block-quantized int8 m/v with per-block f32 scales
+                (~6 bytes/param optimizer footprint instead of 8; the knob
+                that lets llama3-405b train_4k fit 256 v5e chips, see
+                EXPERIMENTS.md §Dry-run).
+  adamw_dd    — double-word (df32) master weights: the paper's technique in
+                the optimizer.  Updates accumulate in ~49-bit precision, so
+                tiny late-training updates are not swallowed by f32 rounding
+                (test_optim.py demonstrates the drift).
+
+Schedule: linear warmup + cosine decay.  Global-norm clipping included.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "make_optimizer"]
+
+_QBLOCK = 128
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master_lo: Any          # df32 master-weight low limbs (adamw_dd) or None
+
+
+# Quantization is PER-ROW (last dim): no reshapes, so the quantized state
+# keeps exactly the parameter's shape/sharding and GSPMD propagation is
+# trivial (block-reshape variants replicated 1.6 TB of moments at 405B
+# scale because shardings do not survive flatten/reshape).
+
+
+def _quantize_int8(x):
+    """Symmetric linear int8 with per-row scale (first moments)."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_int8(q, scale, shape=None):
+    del shape
+    return q.astype(jnp.float32) * scale
+
+
+def _quantize_int8_log(x):
+    """Log-domain affine int8 for NON-NEGATIVE tensors (second moments).
+
+    Linear quantization underflows small v entries to 0 in a row with a
+    large max, and m/(sqrt(0)+eps) then explodes — relative precision must
+    be uniform across magnitudes, i.e. quantize log2(v).  Scale meta packs
+    (min, range) in a trailing dim of 2.
+    """
+    lx = jnp.log2(x + 1e-30)
+    mn = jnp.min(lx, axis=-1, keepdims=True)
+    rng = jnp.maximum(jnp.max(lx, axis=-1, keepdims=True) - mn, 1e-6)
+    t = (lx - mn) / rng
+    q = (jnp.round(t * 255.0) - 128.0).astype(jnp.int8)
+    return q, jnp.concatenate([mn, rng], axis=-1).astype(jnp.float32)
+
+
+def _dequantize_int8_log(q, meta, shape=None):
+    del shape
+    mn, rng = meta[..., :1], meta[..., 1:2]
+    t = (q.astype(jnp.float32) + 128.0) / 255.0
+    return jnp.maximum(jnp.exp2(mn + t * rng) - 1e-30, 0.0)
+
+
+def schedule(step, cfg):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * factor).astype(g.dtype), grads), gn
+
+
+def make_optimizer(run_cfg, constrain=None):
+    """Returns (init_fn, update_fn) for run_cfg.optimizer.
+
+    ``constrain``: optional callback applied to param-shaped f32 trees
+    (dequantized moments).  Required at scale for adamw_int8: GSPMD cannot
+    propagate shardings through the quantization reshapes ((nblocks, 128)
+    <-> param shape), so the dequantized moments otherwise replicate — a
+    1.6 TB/device temp for llama3-405b (observed before this fix).
+    """
+    kind = run_cfg.optimizer
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    constrain = constrain or (lambda tree: tree)
+
+    def init(params):
+        if kind == "adamw_int8":
+            m = jax.tree.map(
+                lambda p: _quantize_int8(jnp.zeros_like(p, jnp.float32)), params)
+            v = jax.tree.map(
+                lambda p: _quantize_int8_log(jnp.zeros_like(p, jnp.float32)),
+                params)
+        else:
+            m = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            v = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        master_lo = None
+        if kind == "adamw_dd":
+            master_lo = jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), m, v, master_lo)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr = schedule(step.astype(jnp.float32), run_cfg)
+        grads, gnorm = clip_by_global_norm(grads, run_cfg.grad_clip)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        flat_p = tdef.flatten_up_to(params)
+
+        def moments(g, m_q, v_q):
+            g32 = g.astype(jnp.float32)
+            if kind == "adamw_int8":
+                m = _dequantize_int8(*m_q)
+                v = _dequantize_int8_log(*v_q)
+            else:
+                m, v = m_q, v_q
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if kind == "adamw_int8":
+                return upd, _quantize_int8(m), _quantize_int8_log(v)
+            return upd, m, v
+
+        def leaf_out(g, m_q, v_q):
+            # layer-stacked leaves scan the update over the layer axis: the
+            # f32 dequantize/update temps otherwise materialize whole-leaf
+            # (4 x 1.7 GB/device per monster leaf at 405B scale)
+            if kind == "adamw_int8" and g.ndim >= 3 and g.shape[0] >= 8:
+                def body(_, xs):
+                    return None, moments(*xs)
+
+                _, (upd, nm, nv) = jax.lax.scan(body, None, (g, m_q, v_q))
+                return upd, nm, nv
+            return moments(g, m_q, v_q)
+
+        outs = [leaf_out(g, m, v) for g, m, v in zip(flat_g, flat_m, flat_v)]
+        upds = tdef.flatten_up_to(constrain(tdef.unflatten([o[0] for o in outs])))
+        new_m = tdef.unflatten([o[1] for o in outs])
+        new_v = tdef.unflatten([o[2] for o in outs])
+
+        if kind == "adamw_dd":
+            from repro.core.efts import quick_two_sum, two_sum
+
+            flat_lo = tdef.flatten_up_to(state.master_lo)
+            new_p, new_lo = [], []
+            for p, lo, u in zip(flat_p, flat_lo, upds):
+                delta = (-lr * (u + run_cfg.weight_decay * p.astype(jnp.float32))
+                         ).astype(jnp.float32)
+                # df32 accumulation: (p, lo) += delta, error-free
+                s, e = two_sum(p.astype(jnp.float32), delta)
+                e = e + lo
+                hi, lo2 = quick_two_sum(s, e)
+                new_p.append(hi.astype(p.dtype))
+                new_lo.append(lo2)
+            return (tdef.unflatten(new_p),
+                    OptState(step, new_m, new_v, tdef.unflatten(new_lo)),
+                    {"lr": lr, "gnorm": gnorm})
+
+        new_p = [
+            (p.astype(jnp.float32)
+             - lr * (u + run_cfg.weight_decay * p.astype(jnp.float32))
+             ).astype(p.dtype)
+            for p, u in zip(flat_p, upds)
+        ]
+        return (tdef.unflatten(new_p), OptState(step, new_m, new_v, None),
+                {"lr": lr, "gnorm": gnorm})
+
+    return init, update

@@ -1,0 +1,84 @@
+"""Failure handling for long-running training: restarts, watchdog, elasticity.
+
+``run_with_restarts`` is the outer loop a 1000-node deployment runs under a
+cluster scheduler: any step exception triggers restore-from-latest +
+continue, up to a failure budget.  Combined with the stateless data
+pipeline (batch = f(step)) and atomic checkpoints, a crash replays at most
+``checkpoint_every`` steps and never corrupts state.
+
+``StepWatchdog`` tracks a step-time EMA and flags stragglers (steps slower
+than ``threshold``x the EMA) — on real fleets the flag feeds the
+re-scheduling / hot-spare logic; here it feeds a callback (tested with
+injected delays).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+__all__ = ["run_with_restarts", "StepWatchdog", "SimulatedFailure"]
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by tests to model preemption / node loss."""
+
+
+class StepWatchdog:
+    def __init__(self, threshold: float = 3.0, ema: float = 0.9,
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+        self.threshold = threshold
+        self.ema_coef = ema
+        self.on_straggler = on_straggler
+        self.ema: Optional[float] = None
+        self.stragglers: list = []
+
+    def observe(self, step: int, duration: float):
+        if self.ema is None:
+            self.ema = duration
+            return False
+        is_straggler = duration > self.threshold * self.ema
+        if is_straggler:
+            self.stragglers.append((step, duration, self.ema))
+            if self.on_straggler:
+                self.on_straggler(step, duration, self.ema)
+            # do not fold outliers into the EMA
+            return True
+        self.ema = self.ema_coef * self.ema + (1 - self.ema_coef) * duration
+        return False
+
+
+def run_with_restarts(make_state, train_step, ckpt_mgr, *, total_steps: int,
+                      checkpoint_every: int = 10, max_failures: int = 5,
+                      watchdog: Optional[StepWatchdog] = None,
+                      on_restart: Optional[Callable[[int, int], None]] = None):
+    """Fault-tolerant train loop.
+
+    make_state(restore_step | None) -> (state, start_step): builds fresh or
+    restored state.  train_step(state, step) -> state.  Any exception rolls
+    back to the latest checkpoint; the stateless data pipeline guarantees
+    identical batches on replay.
+    """
+    failures = 0
+    state, step = make_state(ckpt_mgr.latest_step())
+    while step < total_steps:
+        try:
+            t0 = time.monotonic()
+            state = train_step(state, step)
+            if watchdog is not None:
+                watchdog.observe(step, time.monotonic() - t0)
+            step += 1
+            if step % checkpoint_every == 0 or step == total_steps:
+                ckpt_mgr.save(state, step)
+        except (SimulatedFailure, RuntimeError, OSError) as e:
+            failures += 1
+            if failures > max_failures:
+                raise RuntimeError(
+                    f"failure budget exhausted ({max_failures})") from e
+            ckpt_mgr.wait()
+            restore_step = ckpt_mgr.latest_step()
+            if on_restart:
+                on_restart(step, failures)
+            state, step = make_state(restore_step)
+    ckpt_mgr.wait()
+    return state, step, failures

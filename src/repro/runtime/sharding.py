@@ -1,0 +1,162 @@
+"""Logical-axis sharding rules (t5x-style) for the production mesh.
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"heads", ...); a ``ShardingRules`` table maps those to mesh axes per
+deployment.  This keeps DP/FSDP/TP/EP/SP decisions in one place and makes
+elastic re-meshing a rule-table swap, not a model change.
+
+Two rule tables exist because parameters and activations shard differently:
+parameters are ZeRO-3/FSDP-sharded over the data(+pod) axes on their
+non-tensor-parallel dimension, while activations shard batch over
+data(+pod) and the TP dimension over model.
+
+Use ``activate(mesh, rules)`` (context manager) in drivers; model code calls
+``constrain(x, *names)`` which is a no-op when no context is active (unit
+tests, single CPU device).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+AxisVal = Union[None, str, tuple]
+
+__all__ = [
+    "ShardingRules",
+    "activate",
+    "current",
+    "constrain",
+    "logical_spec",
+    "param_sharding",
+    "act_sharding",
+    "DEFAULT_PARAM_RULES",
+    "DEFAULT_ACT_RULES",
+]
+
+# parameters: FSDP over data(+pod) on the "embed"-like dimension, TP over
+# model on heads/ffn/vocab/experts
+DEFAULT_PARAM_RULES: dict = {
+    "embed": "data",          # ZeRO-3 shard dim (joined by "pod" when present)
+    "embed_pod": ("pod", "data"),
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",       # EP: experts live on the model axis
+    "expert_ffn": None,
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "norm": None,
+}
+
+# activations: batch over (pod, data), TP dims over model, seq optionally
+# over data (sequence parallelism for long-context serving)
+DEFAULT_ACT_RULES: dict = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "data",         # sequence-parallel alternative
+    # Megatron-SP: the residual stream between blocks shards its seq dim
+    # over the TP axis — the remat-saved per-layer activations otherwise
+    # dominate device memory (17 GB/dev at 405B; see EXPERIMENTS.md)
+    "seq_res": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    param_rules: Mapping[str, AxisVal] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_PARAM_RULES))
+    act_rules: Mapping[str, AxisVal] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_ACT_RULES))
+
+    def _resolve(self, rules: Mapping[str, AxisVal], names: Sequence[Optional[str]]) -> P:
+        axes = []
+        used = set()
+        for name in names:
+            if name is None:
+                axes.append(None)
+                continue
+            val = rules.get(name, None)
+            # drop mesh axes not present in this mesh (elastic downsizing)
+            # and axes already consumed by an earlier dimension (a mesh axis
+            # may appear only once in a PartitionSpec)
+            if isinstance(val, tuple):
+                val = tuple(v for v in val if v in self.mesh.axis_names and v not in used)
+                val = val if val else None
+            elif val is not None and (val not in self.mesh.axis_names or val in used):
+                val = None
+            if val is None:
+                axes.append(None)
+                continue
+            for v in (val if isinstance(val, tuple) else (val,)):
+                used.add(v)
+            axes.append(val)
+        return P(*axes)
+
+    def param_spec(self, *names) -> P:
+        return self._resolve(self.param_rules, names)
+
+    def act_spec(self, *names) -> P:
+        return self._resolve(self.act_rules, names)
+
+
+_local = threading.local()
+
+
+def current() -> Optional[ShardingRules]:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def activate(rules: ShardingRules):
+    prev = current()
+    _local.rules = rules
+    try:
+        yield rules
+    finally:
+        _local.rules = prev
+
+
+def constrain(x, *names):
+    """with_sharding_constraint by logical activation axis names (no-op
+
+    outside an activated sharding context, so unit tests run unsharded)."""
+    rules = current()
+    if rules is None:
+        return x
+    spec = rules.act_spec(*names)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def logical_spec(names: Sequence[Optional[str]], kind: str = "param") -> P:
+    rules = current()
+    if rules is None:
+        return P()
+    return rules.param_spec(*names) if kind == "param" else rules.act_spec(*names)
+
+
+def param_sharding(rules: ShardingRules, logical_axes) -> NamedSharding:
+    return NamedSharding(rules.mesh, rules.param_spec(*logical_axes))
+
+
+def act_sharding(rules: ShardingRules, logical_axes) -> NamedSharding:
+    return NamedSharding(rules.mesh, rules.act_spec(*logical_axes))

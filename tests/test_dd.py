@@ -1,0 +1,144 @@
+"""Property tests for double-word arithmetic against exact Fraction oracles."""
+
+from fractions import Fraction
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dd
+
+# keep magnitudes in the normal range (XLA CPU flushes subnormals; see efts.py)
+finite = st.floats(
+    allow_nan=False, allow_infinity=False, min_value=-1e100, max_value=1e100
+).filter(lambda x: x == 0.0 or abs(x) > 1e-100)
+small = st.floats(
+    allow_nan=False, allow_infinity=False, min_value=-1e8, max_value=1e8
+).filter(lambda x: x == 0.0 or abs(x) > 1e-8)
+
+DD_EPS64 = 2.0**-102  # contraction-robust two_prod: ~2^-104 + accumulation slack
+
+
+def _dd_frac(x: dd.DD) -> Fraction:
+    return Fraction(float(x.hi)) + Fraction(float(x.lo))
+
+
+def _mk(a, b=0.0):
+    return dd.from_hi_lo(jnp.float64(a), jnp.float64(b))
+
+
+def _rel_err(got: Fraction, want: Fraction) -> float:
+    if want == 0:
+        return float(abs(got))
+    return abs(float((got - want) / want))
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite, small, finite, small)
+def test_add_relative_error(a_hi, a_lo, b_hi, b_lo):
+    a, b = _mk(a_hi, a_lo * 1e-20), _mk(b_hi, b_lo * 1e-20)
+    got = _dd_frac(dd.add(a, b))
+    want = _dd_frac(a) + _dd_frac(b)
+    assert _rel_err(got, want) <= DD_EPS64
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite, finite)
+def test_mul_relative_error(a_hi, b_hi):
+    a, b = _mk(a_hi), _mk(b_hi)
+    got = _dd_frac(dd.mul(a, b))
+    want = _dd_frac(a) * _dd_frac(b)
+    assert _rel_err(got, want) <= DD_EPS64
+
+
+@settings(max_examples=200, deadline=None)
+@given(finite, finite)
+def test_mul_of_singles_near_exact(a, b):
+    # product of two 1-limb values: bounded by the two_prod error only
+    got = _dd_frac(dd.mul(_mk(a), _mk(b)))
+    want = Fraction(a) * Fraction(b)
+    assert _rel_err(got, want) <= 2.0**-104
+
+
+@settings(max_examples=100, deadline=None)
+@given(small, small)
+def test_div_roundtrip(a, b):
+    if abs(b) < 1e-6:
+        return
+    q = dd.div(_mk(a), _mk(b))
+    back = _dd_frac(dd.mul(q, _mk(b)))
+    assert _rel_err(back, Fraction(a)) <= 8 * DD_EPS64 or abs(a) < 1e-280
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(min_value=1e-8, max_value=1e8))
+def test_sqrt(a):
+    r = dd.sqrt(_mk(a))
+    back = _dd_frac(dd.mul(r, r))
+    assert _rel_err(back, Fraction(a)) <= 16 * DD_EPS64
+
+
+def test_sqrt_zero():
+    r = dd.sqrt(_mk(0.0))
+    assert float(r.hi) == 0.0 and float(r.lo) == 0.0
+
+
+def test_canonical_form():
+    # from_hi_lo renormalizes: |lo| <= ulp(hi)/2
+    x = dd.from_hi_lo(jnp.float64(1.0), jnp.float64(1.0))
+    assert float(x.hi) == 2.0 and float(x.lo) == 0.0
+
+
+def test_sum_compensates():
+    # summing n copies of (1 + eps_tiny) keeps the tiny part; plain f64 drops it
+    n = 1024
+    tiny = 1e-25
+    arr = dd.DD(jnp.ones(n), jnp.full(n, tiny))
+    s = dd.sum_(arr, axis=0)
+    got = _dd_frac(s)
+    want = Fraction(n) + Fraction(n) * Fraction(tiny)
+    assert _rel_err(got, want) < 1e-30
+    # f64 control: 1024 + 1024e-25 == 1024.0 exactly (the tiny part vanishes)
+    assert float(jnp.sum(jnp.ones(n) + tiny)) == float(n)
+
+
+def test_sum_odd_length_and_axes():
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((7, 5))
+    x = dd.from_float(jnp.asarray(a))
+    s0 = dd.sum_(x, axis=0)
+    np.testing.assert_allclose(np.asarray(dd.to_float(s0)), a.sum(0), rtol=1e-15)
+    s1 = dd.sum_(x, axis=1)
+    np.testing.assert_allclose(np.asarray(dd.to_float(s1)), a.sum(1), rtol=1e-15)
+    sa = dd.sum_(x)
+    np.testing.assert_allclose(float(dd.to_float(sa)), a.sum(), rtol=1e-15)
+
+
+def test_dot_accuracy_vs_fraction():
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal(257)
+    b = rng.standard_normal(257)
+    got = _dd_frac(dd.dot(dd.from_float(jnp.asarray(a)), dd.from_float(jnp.asarray(b))))
+    want = sum((Fraction(x) * Fraction(y) for x, y in zip(a, b)), Fraction(0))
+    assert _rel_err(got, want) < 1e-28
+
+
+def test_comparisons_and_where():
+    a = _mk(1.0, 1e-20)
+    b = _mk(1.0, 2e-20)
+    assert bool(dd.lt(a, b)) and bool(dd.le(a, b))
+    assert bool(dd.gt(b, a)) and bool(dd.ge(b, a))
+    w = dd.where(dd.lt(a, b), a, b)
+    assert float(w.lo) == 1e-20
+
+
+def test_f32_limbs():
+    # df32: ~49-bit format out of f32 limbs (the TPU-VPU-native config)
+    a = dd.from_float(jnp.float32(1.0))
+    t = dd.add(a, dd.from_float(jnp.float32(2**-30)))
+    # 1 + 2^-30 is not representable in f32 (24-bit) but is in df32
+    assert float(t.hi) == 1.0 and float(t.lo) == 2.0**-30
+    p = dd.mul(dd.from_float(jnp.float32(1.0 + 2**-12)), dd.from_float(jnp.float32(1.0 + 2**-12)))
+    want = Fraction(1 + Fraction(1, 4096)) ** 2
+    assert _rel_err(_dd_frac(p), want) < 2.0**-44

@@ -1,0 +1,84 @@
+"""Property tests for quad-word arithmetic: must exceed binary128 (113-bit)."""
+
+from fractions import Fraction
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dd, qd
+
+# normal-range magnitudes only (XLA CPU flushes subnormals; see efts.py)
+finite = st.floats(
+    allow_nan=False, allow_infinity=False, min_value=-1e50, max_value=1e50
+).filter(lambda x: x == 0.0 or abs(x) > 1e-50)
+
+# binary128 unit roundoff is 2^-113; qd64 must beat it with margin.
+QD_TARGET = 2.0**-150
+
+
+def _qd_frac(x: qd.QD) -> Fraction:
+    return sum((Fraction(float(l)) for l in x.limbs()), Fraction(0))
+
+
+def _rel(got: Fraction, want: Fraction) -> float:
+    if want == 0:
+        return float(abs(got))
+    return abs(float((got - want) / want))
+
+
+@settings(max_examples=100, deadline=None)
+@given(finite, finite)
+def test_add_beats_binary128(a, b):
+    qa, qb = qd.from_float(jnp.float64(a)), qd.from_float(jnp.float64(b))
+    got = _qd_frac(qd.add(qa, qb))
+    assert _rel(got, Fraction(a) + Fraction(b)) <= QD_TARGET
+
+
+@settings(max_examples=100, deadline=None)
+@given(finite, finite)
+def test_mul_beats_binary128(a, b):
+    qa, qb = qd.from_float(jnp.float64(a)), qd.from_float(jnp.float64(b))
+    got = _qd_frac(qd.mul(qa, qb))
+    want = Fraction(a) * Fraction(b)
+    # product of two f64 values fits in 106 bits -> should be (near-)exact
+    assert _rel(got, want) <= QD_TARGET
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite, finite, finite, finite)
+def test_mul_of_dd_inputs(a, b, c, e):
+    qa = qd.from_dd(dd.add(dd.from_float(jnp.float64(a)), dd.from_float(jnp.float64(b * 1e-18))))
+    qb = qd.from_dd(dd.add(dd.from_float(jnp.float64(c)), dd.from_float(jnp.float64(e * 1e-18))))
+    got = _qd_frac(qd.mul(qa, qb))
+    want = _qd_frac(qa) * _qd_frac(qb)
+    assert _rel(got, want) <= QD_TARGET
+
+
+def test_accumulation_chain_precision():
+    # Accumulate 512 products; relative error must stay far below 2^-113.
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal(512)
+    b = rng.standard_normal(512)
+    acc = qd.from_float(jnp.float64(0.0))
+    va = qd.from_float(jnp.asarray(a))
+    vb = qd.from_float(jnp.asarray(b))
+    prod = qd.mul(va, vb)
+    # tree-free sequential fold in one vectorized shot: use renorm over limbs
+    # by summing with qd.add pairwise halving
+    cur = prod
+    m = 512
+    while m > 1:
+        half = m // 2
+        cur = qd.add(qd.QD(*[l[:half] for l in cur.limbs()]), qd.QD(*[l[half : 2 * half] for l in cur.limbs()]))
+        m = half
+    got = _qd_frac(qd.QD(*[l[0] for l in cur.limbs()]))
+    want = sum((Fraction(x) * Fraction(y) for x, y in zip(a, b)), Fraction(0))
+    assert _rel(got, want) < 2.0**-140
+
+
+def test_to_dd_roundtrip():
+    q = qd.from_float(jnp.float64(3.5))
+    d = qd.to_dd(q)
+    assert float(dd.to_float(d)) == 3.5
