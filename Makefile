@@ -1,0 +1,23 @@
+# Developer entry points.  `make tier1` is the CI gate (ROADMAP.md).
+
+PY ?= python
+
+.PHONY: tier1 test-fast bench bench-gemm tune
+
+tier1:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+# emits BENCH_GEMM.json (perf trajectory artifact) via benchmarks/common.py
+bench-gemm:
+	PYTHONPATH=src $(PY) -m benchmarks.run bench_gemm
+
+# warm the on-disk GEMM plan cache for the common shape buckets
+tune:
+	PYTHONPATH=src $(PY) -c "from repro.gemm import autotune; \
+	[autotune(n, n, n) for n in (64, 128, 256)]"

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import dd, ozaki
 from repro.core.gemm import matmul
-from .common import block, emit, rand_dd, time_fn
+from .common import block, dump_json, emit, rand_dd, time_fn
 
 
 def projected_tpu_gflops(n: int) -> float:
@@ -51,3 +51,5 @@ def run():
     t = time_fn(lambda: an @ bn)
     emit(f"gemm_fig2/f64_numpy/n={n}", t * 1e6,
          f"gflops={2.0 * n**3 / t / 1e9:.1f}")
+    # machine-readable perf trajectory artifact (collected by CI)
+    dump_json("BENCH_GEMM.json", prefix="gemm_")

@@ -1,7 +1,9 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV emission + JSON artifacts."""
 
 from __future__ import annotations
 
+import json
+import platform
 import time
 
 import jax
@@ -9,12 +11,50 @@ import jax.numpy as jnp
 import numpy as np
 
 ROWS = []
+RESULTS = []  # structured mirror of ROWS for JSON artifacts
+
+
+def _parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = {"True": True, "False": False}.get(v, v)
+    return out
 
 
 def emit(name: str, us_per_call: float, derived: str):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    RESULTS.append({"name": name, "us_per_call": us_per_call,
+                    **_parse_derived(derived)})
     print(row, flush=True)
+
+
+def dump_json(path: str, prefix: str | None = None) -> str:
+    """Write the rows emitted so far (optionally name-filtered) as JSON.
+
+    A perf artifact, so the repo's throughput trajectory is machine-readable
+    across commits (CI uploads it per run)."""
+    rows = [r for r in RESULTS
+            if prefix is None or r["name"].startswith(prefix)]
+    doc = {
+        "schema": "repro-bench/v1",
+        "unix_time": time.time(),
+        "platform": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {path} ({len(rows)} rows)", flush=True)
+    return path
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -8,20 +8,29 @@ equally pointless to fuse into the TPU kernel.
 
 All matrices are ``dd.DD`` struct-of-arrays; ``alpha``/``beta`` may be python
 floats or DD scalars.
+
+The accelerator product routes through the unified execution engine
+(``repro.gemm``): pass a prebuilt ``GemmPlan`` via ``plan=`` to pin every
+dispatch decision, or keyword overrides (``backend=``, ``mesh=``, block
+shapes) that feed the planner; with neither, the engine plans from shape,
+platform, and the tuned-block cache.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.gemm import matmul
+
 from . import dd
-from .gemm import matmul
 
 __all__ = ["rgemm", "rsyrk", "transpose", "identity"]
 
 
 def transpose(a: dd.DD) -> dd.DD:
-    return dd.DD(a.hi.T, a.lo.T)
+    # swap the matrix axes only, so 't' flags compose with the engine's
+    # batched operands ((..., m, k) -> (..., k, m)); equals .T for 2-D
+    return dd.DD(jnp.swapaxes(a.hi, -1, -2), jnp.swapaxes(a.lo, -1, -2))
 
 
 def identity(n: int, dtype=jnp.float64) -> dd.DD:
@@ -35,18 +44,18 @@ def _as_dd_scalar(x, dtype) -> dd.DD:
 
 
 def rgemm(transa: str, transb: str, alpha, a: dd.DD, b: dd.DD, beta,
-          c: dd.DD | None = None, *, backend: str = "auto", **kwargs) -> dd.DD:
+          c: dd.DD | None = None, *, plan=None, **plan_overrides) -> dd.DD:
     """C = alpha * op(A) @ op(B) + beta * C   (op per 'n'/'t' flags).
 
     The m/n/k/ld* arguments of the C API are implied by array shapes here;
     the transpose and epilogue happen on the host side of the split, the
-    O(mnk) product on the accelerator path (``backend``).
+    O(mnk) product on the engine-planned accelerator path.
     """
     if transa.lower().startswith("t"):
         a = transpose(a)
     if transb.lower().startswith("t"):
         b = transpose(b)
-    prod = matmul(a, b, backend=backend, **kwargs)
+    prod = matmul(a, b, plan=plan, **plan_overrides)
     alpha = _as_dd_scalar(alpha, prod.hi.dtype)
     out = dd.mul(dd.DD(jnp.broadcast_to(alpha.hi, prod.shape),
                        jnp.broadcast_to(alpha.lo, prod.shape)), prod)

@@ -1,4 +1,11 @@
-"""Backend dispatch for binary128-class GEMM.
+"""Backend dispatch for binary128-class GEMM — compatibility shim.
+
+The real machinery lives in ``repro.gemm`` (the unified execution engine:
+plan -> autotune -> dispatch, see DESIGN.md §4).  This module keeps the
+original ``matmul(a, b, backend=...)`` surface for existing call sites and
+examples; new code should use ``repro.gemm.matmul`` / ``make_plan`` /
+``execute`` directly, which also expose batched and multi-device sharded
+execution.
 
 Backends (all produce DD results with ~2^-104-grade accumulation):
 
@@ -18,33 +25,13 @@ call or via REPRO_GEMM_BACKEND.
 
 from __future__ import annotations
 
-import os
+from repro.gemm import BACKENDS, matmul as _engine_matmul
 
-import jax.numpy as jnp
-
-from . import dd, ozaki
+from . import dd
 
 __all__ = ["matmul", "BACKENDS"]
-
-BACKENDS = ("auto", "pallas", "ozaki", "xla", "ref")
 
 
 def matmul(a: dd.DD, b: dd.DD, *, backend: str = "auto", **kwargs) -> dd.DD:
     """C = A @ B in double-word arithmetic via the selected backend."""
-    backend = backend if backend != "auto" else os.environ.get(
-        "REPRO_GEMM_BACKEND", "ozaki")
-    if backend == "ozaki":
-        return ozaki.ozaki_gemm(a, b, **kwargs)
-    if backend == "pallas":
-        from repro.kernels.ops import ddgemm
-
-        return ddgemm(a, b, **kwargs)
-    if backend == "xla":
-        from repro.kernels.ops import matmul_dd_xla
-
-        return matmul_dd_xla(a, b, **kwargs)
-    if backend == "ref":
-        from repro.kernels.ref import ddgemm_ref
-
-        return ddgemm_ref(a, b)
-    raise ValueError(f"unknown GEMM backend {backend!r}; one of {BACKENDS}")
+    return _engine_matmul(a, b, backend=backend, **kwargs)

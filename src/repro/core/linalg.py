@@ -151,11 +151,14 @@ def apply_pivots(x: dd.DD, piv: np.ndarray, offset: int = 0) -> dd.DD:
     return dd.DD(x.hi[idx], x.lo[idx])
 
 
-def rgetrf(a: dd.DD, block: int = 64, backend: str = "auto"):
+def rgetrf(a: dd.DD, block: int = 64, plan=None, **plan_overrides):
     """Blocked LU with partial pivoting (paper's Rgetrf, steps 1-6).
 
     Returns (lu, piv) with L\\U packed and piv the global LAPACK-style
-    interchange vector.  GEMM updates go through ``rgemm(backend=...)``.
+    interchange vector.  The trailing updates go through the engine-planned
+    ``rgemm``: each shrinking (m-p, nb, n-p) update shape is planned per
+    call, so tuned block entries from the autotune cache (bucketed by shape)
+    are reused across the sweep instead of hardcoded DEFAULT_BLOCKS.
     """
     m, n = a.shape
     assert m == n, "square only (paper's setting)"
@@ -190,7 +193,8 @@ def rgetrf(a: dd.DD, block: int = 64, backend: str = "auto"):
                         lu.lo[p0 + nb:, p0:p0 + nb])
             a22 = dd.DD(lu.hi[p0 + nb:, p0 + nb:],
                         lu.lo[p0 + nb:, p0 + nb:])
-            upd = rgemm("n", "n", -1.0, l21, u12, 1.0, a22, backend=backend)
+            upd = rgemm("n", "n", -1.0, l21, u12, 1.0, a22, plan=plan,
+                        **plan_overrides)
             hi = lu.hi.at[p0 + nb:, p0 + nb:].set(upd.hi)
             lo = lu.lo.at[p0 + nb:, p0 + nb:].set(upd.lo)
             lu = dd.DD(hi, lo)

@@ -34,7 +34,20 @@ import jax.numpy as jnp
 
 from . import dd
 
-__all__ = ["ozaki_gemm", "slice_count", "slice_bits"]
+__all__ = ["ozaki_gemm", "slice_count", "slice_bits", "platform_dtypes"]
+
+
+def platform_dtypes(platform: str):
+    """(slice_dtype, acc_dtype) riding the platform's native GEMM unit.
+
+    TPU: bf16 slices accumulated in f32 on the MXU (the beyond-paper path);
+    everywhere else f64/f64, where XLA's native dot is already the fast unit.
+    Consumed by the plan layer (repro.gemm.make_plan) so call sites never
+    hand-pick slice dtypes.
+    """
+    if platform == "tpu":
+        return jnp.bfloat16, jnp.float32
+    return jnp.float64, jnp.float64
 
 
 def slice_bits(k: int, acc_dtype, slice_dtype=None) -> int:

@@ -46,9 +46,10 @@ import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 import numpy as np
 
+from repro.gemm import matmul as dd_matmul
+
 from . import dd
 from .blas import transpose
-from .gemm import matmul as dd_matmul
 from .linalg import cholesky_solve, rpotrf
 
 __all__ = ["SDPProblem", "SDPResult", "solve_sdp", "random_sdp", "theta_problem"]
@@ -127,8 +128,13 @@ class _F64Ops:
 class _DDOps:
     name = "binary128"
 
-    def __init__(self, backend: str = "auto"):
-        self.backend = backend
+    def __init__(self, plan_overrides: dict | None = None):
+        # planner overrides, not a hand-threaded backend string: the engine
+        # plans each call from shape/platform and these pins (default xla —
+        # see the module docstring's Ozaki scaling caveat).  An explicit {}
+        # means "no pins": full auto planning.
+        self.plan_overrides = dict(plan_overrides) if plan_overrides is not None \
+            else {"backend": "xla"}
 
     def wrap(self, a_np):
         return dd.from_float(jnp.asarray(a_np, jnp.float64))
@@ -137,7 +143,9 @@ class _DDOps:
         return dd.from_float(jnp.eye(n, dtype=jnp.float64) * scale)
 
     def matmul(self, a, b):
-        return dd_matmul(a, b, backend=self.backend)
+        # (..., n, n) leading batch dims route through the engine's vmapped
+        # batched path — the per-constraint stacks run as one call
+        return dd_matmul(a, b, **self.plan_overrides)
 
     add = staticmethod(dd.add)
     sub = staticmethod(dd.sub)
@@ -200,11 +208,11 @@ class _DDOps:
         return float(np.abs(np.asarray(dd.to_float(a))).max())
 
 
-def _ops(precision: str, gemm_backend: str = "auto"):
+def _ops(precision: str, gemm_overrides: dict | None = None):
     if precision in ("double", "f64"):
         return _F64Ops()
     if precision in ("binary128", "dd", "dd64"):
-        return _DDOps(gemm_backend)
+        return _DDOps(gemm_overrides)
     raise ValueError(f"unknown precision {precision!r}")
 
 
@@ -315,11 +323,15 @@ def _step_length(ops, mat, dmat, gamma: float) -> float:
 
 
 def solve_sdp(prob: SDPProblem, *, precision: str = "binary128",
-              gemm_backend: str = "xla", max_iters: int = 120,
+              gemm_overrides: dict | None = None, max_iters: int = 120,
               tol_gap: float | None = None, gamma: float = 0.9,
               verbose: bool = False) -> SDPResult:
-    """SDPA-style Mehrotra predictor-corrector PDIPM (precision-generic)."""
-    ops = _ops(precision, gemm_backend)
+    """SDPA-style Mehrotra predictor-corrector PDIPM (precision-generic).
+
+    ``gemm_overrides`` feeds the GEMM engine's planner for every binary128
+    product (default pins backend="xla"; see the Ozaki caveat above).
+    """
+    ops = _ops(precision, gemm_overrides)
     if tol_gap is None:
         tol_gap = 1e-25 if ops.name == "binary128" else 1e-12
     n, m = prob.n, prob.m
@@ -374,8 +386,9 @@ def solve_sdp(prob: SDPProblem, *, precision: str = "binary128",
         # V_j = X A_j Z^-1 = X (Z^-1 A_j)^T  -> B_ij = tr(A_i V_j)
         u = ops.chol_solve(lz, _hstack(ops, astack, n, m))     # blocks Z^-1 A_j
         s_stack = ops.t(_unstack(ops, u, n, m))                # blocks A_j Z^-1
-        v = ops.matmul(x, _hstack(ops, s_stack, n, m))         # blocks X A_j Z^-1
-        vstack = _unstack(ops, v, n, m)                        # (m, n, n)
+        # one batched GEMM over the constraint stack: X @ (A_j Z^-1) for all
+        # j in a single engine call (the engine vmaps the planned kernel)
+        vstack = ops.matmul(x, s_stack)                        # (m, n, n)
         bmat = ops.pairwise_trace(astack, vstack)
         bmat = ops.smul(0.5, ops.add(bmat, ops.t(bmat)))
 

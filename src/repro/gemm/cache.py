@@ -1,0 +1,128 @@
+"""On-disk plan cache: tuned block shapes keyed by (shape-bucket, dtype, platform).
+
+The paper fixes one (M_Tile, PE-array) configuration at synthesis time; the
+TPU port instead tunes block shapes at runtime and must not re-tune for
+every call.  This cache is the synthesis artifact's software analogue: a
+JSON file mapping ``platform/dtype/bucket/backend`` keys to the winning
+``(bm, bn, bk)`` so `rgetrf`'s trailing updates, SDP's `rsyrk`-shaped calls,
+and repeated service traffic all reuse one tuned tile per shape bucket.
+
+Shapes are bucketed to the next power of two per dimension, so a 500x500x500
+and a 512x512x512 GEMM share a tuning entry — the same coarsening the paper
+applies by synthesizing one design per M_Tile rather than per matrix size.
+
+Location: ``$REPRO_GEMM_CACHE`` if set, else ``~/.cache/repro/gemm_plans.json``.
+Writes are atomic (tmp + rename) so concurrent benchmark shards can't tear
+the file.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Optional
+
+__all__ = ["PlanCache", "default_cache", "set_default_cache", "shape_bucket",
+           "cache_key"]
+
+_ENV_VAR = "REPRO_GEMM_CACHE"
+
+
+def _next_pow2(x: int, floor: int = 8) -> int:
+    x = max(int(x), floor)
+    return 1 << (x - 1).bit_length()
+
+
+def shape_bucket(m: int, k: int, n: int) -> str:
+    """Coarsen a problem shape to its power-of-two bucket."""
+    return f"{_next_pow2(m)}x{_next_pow2(k)}x{_next_pow2(n)}"
+
+
+def cache_key(platform: str, dtype_name: str, m: int, k: int, n: int,
+              backend: str) -> str:
+    return f"{platform}/{dtype_name}/{shape_bucket(m, k, n)}/{backend}"
+
+
+class PlanCache:
+    """JSON-backed block-shape cache with an in-memory write-through layer."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or os.environ.get(_ENV_VAR) or os.path.join(
+            os.path.expanduser("~"), ".cache", "repro", "gemm_plans.json")
+        self._lock = threading.Lock()
+        self._mem: Optional[dict] = None
+
+    def _load(self) -> dict:
+        if self._mem is None:
+            try:
+                with open(self.path) as f:
+                    self._mem = json.load(f)
+            except (OSError, ValueError):
+                self._mem = {}
+        return self._mem
+
+    def get(self, key: str) -> Optional[dict]:
+        with self._lock:
+            entry = self._load().get(key)
+        return dict(entry) if entry else None
+
+    def put(self, key: str, entry: dict) -> None:
+        with self._lock:
+            # re-read the file before writing so sequential tuners (and the
+            # common run-then-run case) merge rather than clobber; the
+            # rename below keeps the JSON untorn.  A true concurrent
+            # interleaving can still lose the slower writer's entry — an
+            # accepted cost for a tuning hint, which the loser re-derives.
+            self._mem = None
+            data = self._load()
+            data[key] = dict(entry)
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            fd, tmp = tempfile.mkstemp(
+                dir=os.path.dirname(self.path) or ".", suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(data, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+
+    def clear(self) -> None:
+        with self._lock:
+            self._mem = {}
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
+
+
+_default: Optional[PlanCache] = None
+_default_explicit = False
+_default_lock = threading.Lock()
+
+
+def default_cache() -> PlanCache:
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = PlanCache()
+        elif not _default_explicit:
+            # re-resolve env-derived caches (both set AND unset transitions):
+            # a cache installed via set_default_cache must win over
+            # $REPRO_GEMM_CACHE, but an env-derived one tracks the env var
+            if _default.path != PlanCache().path:
+                _default = PlanCache()
+        return _default
+
+
+def set_default_cache(cache: Optional[PlanCache]) -> None:
+    """Override the process-wide cache (tests point this at tmp dirs)."""
+    global _default, _default_explicit
+    with _default_lock:
+        _default = cache
+        _default_explicit = cache is not None

@@ -1,0 +1,207 @@
+"""Execution engine: one dispatcher for every extended-precision GEMM.
+
+``execute(plan, a, b)`` routes a planned workload to its backend kernel and
+adds the two capabilities the per-call dispatch never had:
+
+  * **batched GEMM** — leading batch dimensions on either operand are
+    flattened and vmapped over the planned 2-D kernel, so SDP's
+    per-constraint ``X @ (A_j Z^-1)`` stacks run as one call instead of a
+    Python loop over constraints;
+  * **sharded GEMM** — with a mesh in the plan, the M dimension is
+    row-sharded via ``shard_map``: each device computes its row panel
+    against a replicated B and the output *stays* row-sharded
+    (``P(axis, None)``) — no all-gather on the result, matching the paper's
+    Feed/Drain streaming where C' tiles drain independently.
+
+The backend kernels themselves are unchanged: the Pallas systolic tile
+(``kernels/ddgemm.py``), the Ozaki slicing path (``core/ozaki.py``), the
+blocked-XLA fallback and the O(m*k*n) oracle.  Padding to block multiples is
+exact in DD arithmetic (zeros carry no rounding), so the engine owns all
+pad/clamp/slice logic that used to live in ``kernels/ops.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dd
+from .plan import GemmPlan, make_plan, round_up as _round_up
+
+__all__ = ["execute", "matmul"]
+
+
+def _pad_to(x, rows, cols):
+    r, c = x.shape[-2:]
+    if r == rows and c == cols:
+        return x
+    pad = [(0, 0)] * (x.ndim - 2) + [(0, rows - r), (0, cols - c)]
+    return jnp.pad(x, pad)
+
+
+# --------------------------------------------------------------------------
+# 2-D backend dispatch
+# --------------------------------------------------------------------------
+
+
+def _execute_pallas(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
+    from repro.kernels.ddgemm import ddgemm_kernel_call
+
+    from .plan import _clamp_blocks
+
+    m, k = a.shape
+    _, n = b.shape
+    # re-clamp against the *actual* shapes: sharded execution hands each
+    # device a row panel smaller than the global problem the plan saw
+    blk = _clamp_blocks(m, k, n, plan.blocks)
+    bm, bn, bk = blk["bm"], blk["bn"], blk["bk"]
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    a_hi, a_lo = _pad_to(a.hi, mp, kp), _pad_to(a.lo, mp, kp)
+    b_hi, b_lo = _pad_to(b.hi, kp, np_), _pad_to(b.lo, kp, np_)
+    o_hi, o_lo = ddgemm_kernel_call(
+        a_hi, a_lo, b_hi, b_lo, bm=bm, bn=bn, bk=bk, interpret=plan.interpret)
+    return dd.DD(o_hi[:m, :n], o_lo[:m, :n])
+
+
+def _execute_2d(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
+    if plan.backend == "pallas":
+        return _execute_pallas(plan, a, b)
+    if plan.backend == "ozaki":
+        from repro.core.ozaki import ozaki_gemm
+
+        kw = {}
+        if plan.slice_dtype:
+            kw["slice_dtype"] = jnp.dtype(plan.slice_dtype)
+        if plan.acc_dtype:
+            kw["acc_dtype"] = jnp.dtype(plan.acc_dtype)
+        if plan.n_slices is not None:
+            kw["n_slices"] = plan.n_slices
+        if plan.target_bits is not None:
+            kw["target_bits"] = plan.target_bits
+        if plan.full is not None:
+            kw["full"] = plan.full
+        return ozaki_gemm(a, b, **kw)
+    if plan.backend == "xla":
+        from repro.kernels.ops import matmul_dd_xla
+
+        return matmul_dd_xla(a, b, chunk=plan.bk)
+    if plan.backend == "ref":
+        from repro.kernels.ref import ddgemm_ref
+
+        return ddgemm_ref(a, b)
+    raise ValueError(f"unknown backend in plan: {plan.backend!r}")
+
+
+# --------------------------------------------------------------------------
+# batched execution (leading batch dims -> vmap over the planned kernel)
+# --------------------------------------------------------------------------
+
+
+def _execute_batched(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
+    a_batch = a.hi.shape[:-2]
+    b_batch = b.hi.shape[:-2]
+    batch = jnp.broadcast_shapes(a_batch, b_batch)
+    nb = math.prod(batch)
+
+    def flat(x: dd.DD, had_batch) -> dd.DD:
+        if not had_batch:
+            return x
+        tgt = batch + x.hi.shape[-2:]
+        hi = jnp.broadcast_to(x.hi, tgt).reshape((nb,) + x.hi.shape[-2:])
+        lo = jnp.broadcast_to(x.lo, tgt).reshape((nb,) + x.lo.shape[-2:])
+        return dd.DD(hi, lo)
+
+    af = flat(a, bool(a_batch))
+    bf = flat(b, bool(b_batch))
+    fn = jax.vmap(lambda x, y: _execute_2d(plan, x, y),
+                  in_axes=(0 if a_batch else None, 0 if b_batch else None))
+    out = fn(af, bf)
+    m, n = out.hi.shape[-2:]
+    return dd.DD(out.hi.reshape(batch + (m, n)),
+                 out.lo.reshape(batch + (m, n)))
+
+
+# --------------------------------------------------------------------------
+# sharded execution (M-dim row sharding, all-gather-free output)
+# --------------------------------------------------------------------------
+
+
+def _execute_sharded(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh, axis = plan.mesh, plan.shard_axis
+    nshards = mesh.shape[axis]
+    m, k = a.shape
+    _, n = b.shape
+    mp = _round_up(m, nshards)
+    a_hi, a_lo = _pad_to(a.hi, mp, k), _pad_to(a.lo, mp, k)
+
+    def local(ah, al, bh, bl):
+        out = _execute_2d(plan, dd.DD(ah, al), dd.DD(bh, bl))
+        return out.hi, out.lo
+
+    row = P(axis, None)
+    rep = P(None, None)
+    o_hi, o_lo = shard_map(
+        local, mesh=mesh,
+        in_specs=(row, row, rep, rep),
+        # the output stays row-sharded: each device drains its own C' panel,
+        # no all-gather — consumers slice or keep computing shard-local
+        out_specs=(row, row),
+        check_rep=False,
+    )(a_hi, a_lo, b.hi, b.lo)
+    if mp == m:
+        return dd.DD(o_hi, o_lo)  # keeps the row-sharded layout
+    return dd.DD(o_hi[:m], o_lo[:m])
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+
+def execute(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
+    """Run C = A @ B under a plan.  A: (..., m, k), B: (..., k, n)."""
+    if a.hi.shape[-1] != b.hi.shape[-2]:
+        raise ValueError(f"inner dims mismatch: {a.shape} x {b.shape}")
+    batched = a.hi.ndim > 2 or b.hi.ndim > 2
+    if batched:
+        if plan.mesh is not None:
+            raise NotImplementedError("batched + sharded GEMM in one call")
+        if plan.batch == "none":
+            raise ValueError(
+                "plan was made for 2-D operands but inputs have batch dims; "
+                "rebuild with batch_shape= (engine.matmul does this)")
+        return _execute_batched(plan, a, b)
+    if plan.mesh is not None and plan.shard_axis is not None:
+        return _execute_sharded(plan, a, b)
+    return _execute_2d(plan, a, b)
+
+
+def matmul(a: dd.DD, b: dd.DD, *, plan: Optional[GemmPlan] = None,
+           **overrides) -> dd.DD:
+    """Plan-and-execute convenience: the repo-wide GEMM entry point.
+
+    ``overrides`` are forwarded to ``make_plan`` (backend=, bm/bn/bk=,
+    mesh=, shard_axis=, ...); pass a prebuilt ``plan`` to skip planning.
+    The two are exclusive — a plan already fixes every decision, so
+    overrides alongside it would be silently dead.
+    """
+    if plan is not None and overrides:
+        raise ValueError(
+            f"pass either plan= or planner overrides, not both "
+            f"(got overrides {sorted(overrides)} with an explicit plan; "
+            f"use plan.with_(...) to modify it)")
+    if plan is None:
+        m, k = a.hi.shape[-2:]
+        k2, n = b.hi.shape[-2:]
+        if k != k2:
+            raise ValueError(f"inner dims mismatch: {a.shape} x {b.shape}")
+        batch_shape = jnp.broadcast_shapes(a.hi.shape[:-2], b.hi.shape[:-2])
+        plan = make_plan(m, k, n, dtype=a.hi.dtype,
+                         batch_shape=batch_shape, **overrides)
+    return execute(plan, a, b)

@@ -1,0 +1,157 @@
+"""Planning layer: one decision point for every extended-precision GEMM.
+
+The paper's FPGA fixes its execution configuration (PE-array shape, M_Tile,
+operand format) at synthesis time; every GEMM then streams through that one
+design.  ``GemmPlan`` is the runtime analogue: a frozen record of every
+choice the engine needs — backend, block shapes, limb dtype, interpret mode,
+batch strategy, and an optional mesh/axis for multi-device row sharding —
+produced once by ``make_plan`` from the problem shape and platform, then
+handed to ``engine.execute``.
+
+Block shapes resolve in priority order: explicit overrides > tuned entries
+from the on-disk cache (written by ``autotune``) > the clamped heuristic
+``DEFAULT_BLOCKS`` defined below (and re-exported by ``kernels.ddgemm``
+for kernel-level callers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import cache as plan_cache
+
+__all__ = ["GemmPlan", "make_plan", "resolve_backend", "round_up",
+           "BACKENDS", "DEFAULT_BLOCKS"]
+
+BACKENDS = ("auto", "pallas", "ozaki", "xla", "ref")
+
+# (bm, bn, bk) heuristic defaults: the "8x16 PE / M_Tile=512" analogue from
+# the bench_tile sweep — VMEM cost = (bm*bk + bk*bn + 2*bm*bn) * 2 limbs * 4B.
+# Owned by the plan layer (tile choice is a planning concern); the Pallas
+# kernel module re-exports it so kernel-level callers keep working without
+# this module importing pallas eagerly.
+DEFAULT_BLOCKS = {"bm": 128, "bn": 128, "bk": 16}
+
+_ENV_BACKEND = "REPRO_GEMM_BACKEND"
+_DEFAULT_BACKEND = "ozaki"
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """Everything ``engine.execute`` needs to run one GEMM workload."""
+
+    backend: str                      # pallas | ozaki | xla | ref
+    bm: int                           # pallas M-tile; also clamps batched calls
+    bn: int                           # pallas N-tile
+    bk: int                           # pallas K-tile / xla K-chunk
+    limb_dtype: str                   # 'float64' (dd64) | 'float32' (df32)
+    interpret: bool                   # pallas interpret mode (True off-TPU)
+    platform: str                     # 'cpu' | 'tpu' | 'gpu'
+    batch: str = "none"               # none | vmap
+    batch_shape: Tuple[int, ...] = ()
+    shard_axis: Optional[str] = None  # mesh axis for M-dim row sharding
+    mesh: Any = dataclasses.field(default=None, compare=False, repr=False)
+    slice_dtype: Optional[str] = None  # ozaki operand slices (bf16 on TPU)
+    acc_dtype: Optional[str] = None    # ozaki accumulator (f32 on TPU)
+    n_slices: Optional[int] = None     # ozaki slice-count override
+    target_bits: Optional[int] = None  # ozaki significand coverage target
+    full: Optional[bool] = None        # ozaki: keep sub-target slice products
+    source: str = "heuristic"          # heuristic | tuned | override
+
+    @property
+    def blocks(self) -> dict:
+        return {"bm": self.bm, "bn": self.bn, "bk": self.bk}
+
+    def with_(self, **changes) -> "GemmPlan":
+        return dataclasses.replace(self, **changes)
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    be = backend if backend != "auto" else os.environ.get(
+        _ENV_BACKEND, _DEFAULT_BACKEND)
+    if be not in BACKENDS or be == "auto":
+        raise ValueError(f"unknown GEMM backend {be!r}; one of {BACKENDS}")
+    return be
+
+
+def round_up(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+def _clamp_blocks(m: int, k: int, n: int, blocks: dict) -> dict:
+    # tiny problems keep tiny tiles: clamp to the 8-aligned problem size so a
+    # 16x16 GEMM does not pad out to a 128x128 tile.  The single clamp rule
+    # for the whole package — engine/autotune import it rather than redefine.
+    return {
+        "bm": min(blocks["bm"], round_up(m, 8)),
+        "bn": min(blocks["bn"], round_up(n, 8)),
+        "bk": min(blocks["bk"], round_up(k, 8)),
+    }
+
+
+def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
+              backend: str = "auto", batch_shape: Tuple[int, ...] = (),
+              bm: Optional[int] = None, bn: Optional[int] = None,
+              bk: Optional[int] = None, interpret: Optional[bool] = None,
+              platform: Optional[str] = None, mesh=None,
+              shard_axis: Optional[str] = None,
+              slice_dtype=None, acc_dtype=None,
+              n_slices: Optional[int] = None,
+              target_bits: Optional[int] = None, full: Optional[bool] = None,
+              chunk: Optional[int] = None,
+              use_cache: bool = True) -> GemmPlan:
+    """Plan one GEMM workload: (batch_shape) x (m, k) @ (k, n).
+
+    Consults the tuned-block cache for (shape-bucket, dtype, platform) before
+    falling back to clamped DEFAULT_BLOCKS, so autotuned tiles are reused
+    across calls and across processes.
+    """
+    be = resolve_backend(backend)
+    platform = platform or jax.default_backend()
+    dtype = jnp.dtype(dtype)
+    if interpret is None:
+        interpret = platform != "tpu"
+    if chunk is not None:
+        bk = bk or chunk  # legacy xla-backend spelling of the K block
+
+    source = "heuristic"
+    blocks = dict(DEFAULT_BLOCKS)
+    if use_cache and be in ("pallas", "xla") and (bm, bn, bk) == (None,) * 3:
+        key = plan_cache.cache_key(platform, dtype.name, m, k, n, be)
+        tuned = plan_cache.default_cache().get(key)
+        # adopt only well-formed entries: the cache is a hint, and a bad
+        # persistent value (hand-edit, corruption) must degrade to the
+        # heuristic, not break every GEMM in this bucket forever
+        if tuned and all(
+                isinstance(tuned.get(x), int) and tuned[x] > 0
+                for x in ("bm", "bn", "bk")):
+            blocks = {x: int(tuned[x]) for x in ("bm", "bn", "bk")}
+            source = "tuned"
+    blocks = _clamp_blocks(m, k, n, blocks)
+    if bm or bn or bk:
+        source = "override"
+    blocks["bm"] = bm or blocks["bm"]
+    blocks["bn"] = bn or blocks["bn"]
+    blocks["bk"] = bk or blocks["bk"]
+
+    if be == "ozaki" and slice_dtype is None and acc_dtype is None:
+        from repro.core.ozaki import platform_dtypes
+
+        slice_dtype, acc_dtype = platform_dtypes(platform)
+
+    if mesh is not None and shard_axis is None:
+        shard_axis = mesh.axis_names[0]
+
+    return GemmPlan(
+        backend=be, limb_dtype=dtype.name, interpret=bool(interpret),
+        platform=platform, batch="vmap" if batch_shape else "none",
+        batch_shape=tuple(batch_shape), shard_axis=shard_axis, mesh=mesh,
+        slice_dtype=jnp.dtype(slice_dtype).name if slice_dtype else None,
+        acc_dtype=jnp.dtype(acc_dtype).name if acc_dtype else None,
+        n_slices=n_slices, target_bits=target_bits, full=full,
+        source=source, **blocks)

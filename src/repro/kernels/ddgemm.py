@@ -36,11 +36,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.efts import quick_two_sum, two_prod, two_sum
 
+from repro.gemm.plan import DEFAULT_BLOCKS  # noqa: F401  (canonical home)
+
 __all__ = ["ddgemm_kernel_call", "DEFAULT_BLOCKS"]
 
-# (bm, bn, bk) defaults: the "8x16 PE / M_Tile=512" analogue chosen by the
-# bench_tile sweep — VMEM cost = (bm*bk + bk*bn + 2*bm*bn) * 2 limbs * 4B.
-DEFAULT_BLOCKS = {"bm": 128, "bn": 128, "bk": 16}
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
 
 
 def _dd_rank1_wave(acc_hi, acc_lo, a_hi, a_lo, b_hi, b_lo):
@@ -133,7 +135,7 @@ def ddgemm_kernel_call(a_hi, a_lo, b_hi, b_lo, *, bm: int, bn: int, bk: int,
             pltpu.VMEM((bm, bn), dtype),
             pltpu.VMEM((bm, bn), dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,9 +1,12 @@
 """Public jit'd entry points for the extended-precision GEMM kernels.
 
-``ddgemm`` handles arbitrary (m, k) x (k, n) shapes by zero-padding to block
-multiples (zeros are exact in DD arithmetic, so padding never changes the
-result), then calls the Pallas kernel.  ``interpret=None`` auto-selects
-interpret mode off-TPU so the same call site deploys unchanged on hardware.
+``ddgemm`` is now a thin shim over the unified execution engine
+(``repro.gemm``), which owns the zero-padding to block multiples (zeros are
+exact in DD arithmetic, so padding never changes the result), block-shape
+clamping, and tuned-tile lookup that used to live here.  ``interpret=None``
+auto-selects interpret mode off-TPU so the same call site deploys unchanged
+on hardware.  ``matmul_dd_xla`` remains the blocked-XLA backend
+implementation the engine dispatches to.
 """
 
 from __future__ import annotations
@@ -12,13 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dd
-from .ddgemm import DEFAULT_BLOCKS, ddgemm_kernel_call
+from repro.gemm.plan import round_up as _round_up
+from .ddgemm import DEFAULT_BLOCKS  # noqa: F401  (re-export for tuners)
 
 __all__ = ["ddgemm", "matmul_dd_xla"]
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _pad_to(x, rows, cols):
@@ -28,33 +28,13 @@ def _pad_to(x, rows, cols):
     return jnp.pad(x, ((0, rows - r), (0, cols - c)))
 
 
-def _round_up(x: int, b: int) -> int:
-    return -(-x // b) * b
-
-
 def ddgemm(a: dd.DD, b: dd.DD, *, bm: int | None = None, bn: int | None = None,
            bk: int | None = None, interpret: bool | None = None) -> dd.DD:
     """C = A @ B in double-word arithmetic via the Pallas systolic-tile kernel."""
-    bm = bm or DEFAULT_BLOCKS["bm"]
-    bn = bn or DEFAULT_BLOCKS["bn"]
-    bk = bk or DEFAULT_BLOCKS["bk"]
-    if interpret is None:
-        interpret = not _on_tpu()
-    m, k = a.shape
-    k2, n = b.shape
-    if k != k2:
-        raise ValueError(f"inner dims mismatch: {a.shape} x {b.shape}")
-    # clamp blocks to (padded) problem size so tiny problems stay tiny
-    bm = min(bm, _round_up(m, 8))
-    bn = min(bn, _round_up(n, 8))
-    bk = min(bk, _round_up(k, 8))
-    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
-    a_hi, a_lo = _pad_to(a.hi, mp, kp), _pad_to(a.lo, mp, kp)
-    b_hi, b_lo = _pad_to(b.hi, kp, np_), _pad_to(b.lo, kp, np_)
-    o_hi, o_lo = ddgemm_kernel_call(
-        a_hi, a_lo, b_hi, b_lo, bm=bm, bn=bn, bk=bk, interpret=interpret
-    )
-    return dd.DD(o_hi[:m, :n], o_lo[:m, :n])
+    from repro import gemm as engine
+
+    return engine.matmul(a, b, backend="pallas", bm=bm, bn=bn, bk=bk,
+                         interpret=interpret)
 
 
 def matmul_dd_xla(a: dd.DD, b: dd.DD, *, chunk: int = 16) -> dd.DD:

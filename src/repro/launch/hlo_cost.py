@@ -38,7 +38,7 @@ _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*->.*\{\s*$")
 # no '=' exclusion — tuples never nest parens) or a scalar/array type
 _OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^()]*\)|[\w\[\],{}\/ ]+?)\s+([\w\-]+)\(")
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_OPERANDS_RE = re.compile(r"\(((?:%[\w\.\-]+(?:,\s*)?)+)\)")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
 _CALLS_RE = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w\.\-]+)")
 _WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
 _CONST_CMP = re.compile(r"constant\((\d+)\)")
@@ -142,18 +142,34 @@ class HloCost:
             self.collective_counts[k] = self.collective_counts.get(k, 0) + v * mult
 
 
+def _operand_names(line: str, kind: str) -> List[str]:
+    """Names inside the op's operand parens.
+
+    Handles both HLO text styles — bare names ``dot(%a, %b)`` and typed
+    operands ``dot(f32[8,8]{1,0} %a, ...)`` (newer XLA dumps) — by scanning
+    to the matching close paren (tuple-typed operands nest) and pulling the
+    ``%name`` tokens."""
+    start = line.index(kind + "(") + len(kind)
+    depth = 0
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return _NAME_RE.findall(line[start + 1:i])
+    return []
+
+
 def _dot_flops(op: _Op, shapes: Dict[str, str]) -> Tuple[float, float]:
     """(flops, bytes) for a dot given the symbol shape table."""
     res_elems, res_bytes = _shape_elems_bytes(op.type_str)
-    m = _OPERANDS_RE.search(op.line[op.line.index(op.kind + "("):])
+    names = _operand_names(op.line, op.kind)
     operand_bytes = 0
-    lhs_name = None
-    if m:
-        names = [n.strip().lstrip("%") for n in m.group(1).split(",")]
-        lhs_name = names[0] if names else None
-        for n in names:
-            if n in shapes:
-                operand_bytes += _shape_elems_bytes(shapes[n])[1]
+    lhs_name = names[0] if names else None
+    for n in names:
+        if n in shapes:
+            operand_bytes += _shape_elems_bytes(shapes[n])[1]
     # contracted extent from the lhs shape + contracting dims
     contracted = 1
     mdims = _DOT_DIMS.search(op.line)

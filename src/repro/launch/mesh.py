@@ -9,7 +9,18 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "compat_make_mesh"]
+
+
+def compat_make_mesh(shape, axes, devices=None):
+    """jax.make_mesh across jax versions.
+
+    axis_types/AxisType only landed after 0.4.x, and explicit Auto axes
+    keep newer versions from warning."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kw = {} if axis_type is None else {
+        "axis_types": (axis_type.Auto,) * len(axes)}
+    return jax.make_mesh(shape, axes, devices=devices, **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,8 +36,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices, found {len(devices)} — run "
             "under launch/dryrun.py (it forces host-device emulation) or on "
             "real hardware")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes, devices=devices)
 
 
 def make_local_mesh(data: int | None = None, model: int = 1):
@@ -34,5 +44,4 @@ def make_local_mesh(data: int | None = None, model: int = 1):
     n = len(jax.devices())
     data = data if data is not None else max(1, n // model)
     devices = jax.devices()[: data * model]
-    return jax.make_mesh((data, model), ("data", "model"), devices=devices,
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"), devices=devices)

@@ -147,17 +147,16 @@ import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save_pytree, restore_resharded
+from repro.launch.mesh import compat_make_mesh
 
 tree = {{"w": jnp.arange(64.0).reshape(8, 8)}}
-mesh1 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh1 = compat_make_mesh((4, 2), ("data", "model"))
 sh1 = NamedSharding(mesh1, P("data", "model"))
 tree1 = {{"w": jax.device_put(tree["w"], sh1)}}
 save_pytree(tree1, r"{tmp_path}", 1)
 
-mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                      devices=jax.devices()[:4],
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = compat_make_mesh((2, 2), ("data", "model"),
+                         devices=jax.devices()[:4])
 sh2 = {{"w": NamedSharding(mesh2, P("model", "data"))}}
 restored, meta = restore_resharded(tree, r"{tmp_path}", sh2)
 assert meta["step"] == 1
@@ -230,26 +229,24 @@ class TestFailover:
 
 class TestShardingRules:
     def test_rule_resolution_and_elastic_drop(self):
-        import jax as _jax
         from jax.sharding import PartitionSpec as P
 
+        from repro.launch.mesh import compat_make_mesh
         from repro.runtime.sharding import ShardingRules
 
-        mesh = _jax.make_mesh((1,), ("data",),
-                              axis_types=(_jax.sharding.AxisType.Auto,))
+        mesh = compat_make_mesh((1,), ("data",))
         rules = ShardingRules(mesh=mesh)
         # "model" axis absent from this mesh -> dropped
         assert rules.param_spec("embed", "heads") == P("data", None)
         assert rules.act_spec("batch", "seq", "ffn") == P(("data",), None, None)
 
     def test_duplicate_axis_suppressed(self):
-        import jax as _jax
         from jax.sharding import PartitionSpec as P
 
+        from repro.launch.mesh import compat_make_mesh
         from repro.runtime.sharding import ShardingRules
 
-        mesh = _jax.make_mesh((1, 1), ("data", "model"),
-                              axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat_make_mesh((1, 1), ("data", "model"))
         rules = ShardingRules(mesh=mesh)
         # vocab and heads both map to "model": second use must drop
         spec = rules.param_spec("vocab", "heads")

@@ -23,9 +23,16 @@ def test_train_loss_decreases_and_failover_recovers(tmp_path):
 
 @pytest.mark.slow
 def test_train_ssm_family(tmp_path):
+    from repro.configs.base import RunConfig
     from repro.launch.train import train
 
-    out = train("xlstm-350m", steps=40, batch=4, seq=64, verbose=False)
+    # 40 short steps: the default warmup (10 steps) burns a quarter of the
+    # run at reduced LR and leaves the loss drop marginal — configure the
+    # short run explicitly so the test checks learning, not the schedule
+    rc = RunConfig(learning_rate=2e-3, warmup_steps=5, total_steps=40,
+                   param_dtype="float32", microbatches=1)
+    out = train("xlstm-350m", steps=40, batch=4, seq=64, run_cfg=rc,
+                verbose=False)
     losses = out["losses"]
     assert np.mean(losses[-5:]) < 0.95 * np.mean(losses[:5])
 
