@@ -2,13 +2,18 @@
 
 PY ?= python
 
-.PHONY: tier1 test-fast bench bench-gemm tune
+.PHONY: tier1 test-fast conformance bench bench-gemm bench-accuracy tune
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+# cross-backend x cross-precision matrix vs the ref oracles (CI job)
+conformance:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_conformance.py \
+	tests/test_accuracy_gate.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
@@ -17,7 +22,13 @@ bench:
 bench-gemm:
 	PYTHONPATH=src $(PY) -m benchmarks.run bench_gemm
 
+# emits BENCH_ACCURACY.json (per-tier observed relative error on the
+# exact-rational Hilbert case; the accuracy regression artifact)
+bench-accuracy:
+	PYTHONPATH=src $(PY) -m benchmarks.run bench_accuracy
+
 # warm the on-disk GEMM plan cache for the common shape buckets
 tune:
 	PYTHONPATH=src $(PY) -c "from repro.gemm import autotune; \
-	[autotune(n, n, n) for n in (64, 128, 256)]"
+	[autotune(n, n, n) for n in (64, 128, 256)]; \
+	[autotune(n, n, n, precision='qd') for n in (64, 128)]"

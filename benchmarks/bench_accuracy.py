@@ -1,10 +1,14 @@
-"""Paper Eq. 6 / §IV-B1: E_L1 accuracy vs matrix size.
+"""Paper Eq. 6 / §IV-B1: E_L1 accuracy vs matrix size + the tier gate.
 
 The paper reports E_L1 (mean |difference| vs the reference Rgemm) between
 1e-31 and 1e-30 for n < 512, growing to 2e-28 at n = 4096.  We measure the
 same metric for dd64 against an exact-direction oracle (ozaki full, which
 carries ~2x the bits), plus the f64 'double' control to show the precision
 gap the paper's accelerator exists to close.
+
+Also emits ``BENCH_ACCURACY.json``: the per-tier observed relative error on
+the exact-rational Hilbert case (core/accuracy.py), the artifact the
+accuracy regression gate (tests/test_accuracy_gate.py) pins and CI uploads.
 """
 
 from __future__ import annotations
@@ -12,11 +16,19 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import dd, ozaki
+from repro.core.accuracy import write_accuracy_json
 from repro.core.gemm import matmul
 from .common import emit, rand_dd
 
 
 def run():
+    # precision-ladder regression artifact: observed rel. error per tier
+    doc = write_accuracy_json("BENCH_ACCURACY.json", n=16)
+    for tier, row in doc["tiers"].items():
+        emit(f"accuracy_gate/hilbert/{tier}", 0.0,
+             f"rel_err={row['rel_err']:.3e};gate={row['gate']:.3e};"
+             f"passes={row['passes']}")
+    print("# wrote BENCH_ACCURACY.json", flush=True)
     for n in (64, 128, 256):
         a, b = rand_dd((n, n), 11), rand_dd((n, n), 12)
         got = matmul(a, b, backend="ozaki")

@@ -1,0 +1,105 @@
+"""Accuracy regression oracle: exact-rational Hilbert-matrix GEMM.
+
+The paper validates its FPGA GEMM against a CPU Rgemm reference (Eq. 6);
+here each precision tier is validated against an *exact* reference instead.
+The Hilbert matrix H_ij = 1/(i+j+1) (maximally ill-conditioned, the classic
+extended-precision stress case) is formed IN the tier's own arithmetic — a
+multi-limb division, so every limb carries signal and the product genuinely
+rounds at the tier's precision — and H @ H is then evaluated in exact
+rational arithmetic (``fractions.Fraction``) over those representable
+multi-limb entries.  The observed relative error of each tier's engine
+output against that oracle is the quantity the regression gate pins:
+
+    dd (2 limbs, ~106-bit)  must stay <= 2^-100
+    qd (4 limbs, ~212-bit)  must stay <= 2^-190
+
+``benchmarks/bench_accuracy.py`` emits the same numbers to
+``BENCH_ACCURACY.json`` (uploaded by CI) so the accuracy trajectory is
+machine-readable across commits; tests/test_accuracy_gate.py asserts the
+thresholds in tier 1.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from fractions import Fraction
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import mp
+
+__all__ = ["GATES", "hilbert_f64", "hilbert_relative_error",
+           "accuracy_report", "write_accuracy_json"]
+
+# per-tier observed-relative-error ceilings (the regression gate)
+GATES = {"dd": 2.0 ** -100, "qd": 2.0 ** -190}
+
+
+def hilbert_f64(n: int) -> np.ndarray:
+    """Hilbert matrix H_ij = 1/(i+j+1), rounded once to f64."""
+    i = np.arange(n, dtype=np.float64)
+    return 1.0 / (i[:, None] + i[None, :] + 1.0)
+
+
+def hilbert_tier(precision: str, n: int):
+    """Hilbert matrix formed in tier arithmetic: every limb carries signal."""
+    i = jnp.arange(n, dtype=jnp.float64)
+    denom = i[:, None] + i[None, :] + 1.0
+    one = mp.from_float(jnp.ones((n, n)), precision)
+    return mp.div(one, mp.from_float(denom, precision))
+
+
+def _frac(limbs_np, i: int, j: int) -> Fraction:
+    return sum((Fraction(float(l[i, j])) for l in limbs_np), Fraction(0))
+
+
+def hilbert_relative_error(precision: str = "dd", n: int = 16,
+                           backend: str = "xla") -> float:
+    """Max observed relative error of one engine tier on H @ H vs the exact
+    rational product of the tier's own (representable) H entries."""
+    from repro.gemm import matmul
+
+    x = hilbert_tier(precision, n)
+    got = matmul(x, x, backend=backend)
+    in_limbs = [np.asarray(l, np.float64) for l in mp.limbs(x)]
+    out_limbs = [np.asarray(l, np.float64) for l in mp.limbs(got)]
+    fx = [[_frac(in_limbs, i, j) for j in range(n)] for i in range(n)]
+    worst = 0.0
+    for i in range(n):
+        for j in range(n):
+            want = sum((fx[i][k] * fx[k][j] for k in range(n)), Fraction(0))
+            rel = abs(float((_frac(out_limbs, i, j) - want) / want))
+            worst = max(worst, rel)
+    return worst
+
+
+def accuracy_report(n: int = 16, backend: str = "xla") -> dict:
+    """Observed relative error per tier, with its gate and headroom."""
+    tiers = {}
+    for prec, gate in GATES.items():
+        err = hilbert_relative_error(prec, n=n, backend=backend)
+        tiers[prec] = {
+            "rel_err": err,
+            "gate": gate,
+            "log2_err": float(np.log2(err)) if err > 0 else None,
+            "passes": bool(err <= gate),
+        }
+    return tiers
+
+
+def write_accuracy_json(path: str, n: int = 16, backend: str = "xla") -> dict:
+    """Emit the per-tier accuracy artifact (schema repro-accuracy/v1)."""
+    import jax
+
+    doc = {
+        "schema": "repro-accuracy/v1",
+        "unix_time": time.time(),
+        "platform": jax.default_backend(),
+        "case": {"matrix": "hilbert", "n": n, "backend": backend},
+        "tiers": accuracy_report(n=n, backend=backend),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return doc

@@ -6,14 +6,16 @@ and the alpha/beta epilogue (Eq. 1), because scalar-matrix multiply and
 matrix add are O(n^2) and "very costly in a GEMM design on an FPGA" — and
 equally pointless to fuse into the TPU kernel.
 
-All matrices are ``dd.DD`` struct-of-arrays; ``alpha``/``beta`` may be python
-floats or DD scalars.
+Matrices are multi-limb struct-of-arrays values — ``dd.DD`` (binary128
+class) or ``qd.QD`` (binary128+ class); the epilogue runs in the operands'
+own tier via ``core.mp``.  ``alpha``/``beta`` may be python floats or
+multi-limb scalars of either tier (promoted to match the product).
 
 The accelerator product routes through the unified execution engine
 (``repro.gemm``): pass a prebuilt ``GemmPlan`` via ``plan=`` to pin every
 dispatch decision, or keyword overrides (``backend=``, ``mesh=``, block
 shapes) that feed the planner; with neither, the engine plans from shape,
-platform, and the tuned-block cache.
+precision, platform, and the tuned-block cache.
 """
 
 from __future__ import annotations
@@ -22,29 +24,32 @@ import jax.numpy as jnp
 
 from repro.gemm import matmul
 
-from . import dd
+from . import mp
 
 __all__ = ["rgemm", "rsyrk", "transpose", "identity"]
 
 
-def transpose(a: dd.DD) -> dd.DD:
+def transpose(a):
     # swap the matrix axes only, so 't' flags compose with the engine's
     # batched operands ((..., m, k) -> (..., k, m)); equals .T for 2-D
-    return dd.DD(jnp.swapaxes(a.hi, -1, -2), jnp.swapaxes(a.lo, -1, -2))
+    return mp.map_limbs(lambda l: jnp.swapaxes(l, -1, -2), a)
 
 
-def identity(n: int, dtype=jnp.float64) -> dd.DD:
-    return dd.from_float(jnp.eye(n, dtype=dtype))
+def identity(n: int, dtype=jnp.float64, precision: str = "dd"):
+    return mp.from_float(jnp.eye(n, dtype=dtype), precision)
 
 
-def _as_dd_scalar(x, dtype) -> dd.DD:
-    if isinstance(x, dd.DD):
-        return x
-    return dd.from_float(jnp.asarray(x, dtype=dtype))
+def _as_scalar(x, like):
+    """Coerce a python float / multi-limb scalar to ``like``'s tier."""
+    prec = mp.precision_of(like)
+    try:
+        return mp.promote(x, prec)
+    except TypeError:
+        return mp.from_float(jnp.asarray(x, like.limbs()[0].dtype), prec)
 
 
-def rgemm(transa: str, transb: str, alpha, a: dd.DD, b: dd.DD, beta,
-          c: dd.DD | None = None, *, plan=None, **plan_overrides) -> dd.DD:
+def rgemm(transa: str, transb: str, alpha, a, b, beta,
+          c=None, *, plan=None, **plan_overrides):
     """C = alpha * op(A) @ op(B) + beta * C   (op per 'n'/'t' flags).
 
     The m/n/k/ld* arguments of the C API are implied by array shapes here;
@@ -56,19 +61,17 @@ def rgemm(transa: str, transb: str, alpha, a: dd.DD, b: dd.DD, beta,
     if transb.lower().startswith("t"):
         b = transpose(b)
     prod = matmul(a, b, plan=plan, **plan_overrides)
-    alpha = _as_dd_scalar(alpha, prod.hi.dtype)
-    out = dd.mul(dd.DD(jnp.broadcast_to(alpha.hi, prod.shape),
-                       jnp.broadcast_to(alpha.lo, prod.shape)), prod)
+    alpha = _as_scalar(alpha, prod)
+    out = mp.mul(mp.broadcast_to(alpha, prod.shape), prod)
     if c is not None:
-        beta = _as_dd_scalar(beta, prod.hi.dtype)
-        bc = dd.mul(dd.DD(jnp.broadcast_to(beta.hi, c.shape),
-                          jnp.broadcast_to(beta.lo, c.shape)), c)
-        out = dd.add(out, bc)
+        beta = _as_scalar(beta, prod)
+        bc = mp.mul(mp.broadcast_to(beta, c.shape), c)
+        out = mp.add(out, bc)
     return out
 
 
-def rsyrk(uplo: str, trans: str, alpha, a: dd.DD, beta,
-          c: dd.DD | None = None, **kwargs) -> dd.DD:
+def rsyrk(uplo: str, trans: str, alpha, a, beta,
+          c=None, **kwargs):
     """C = alpha * A @ A^T + beta * C (symmetric rank-k update, full form).
 
     SDPA's PDIPM calls this shape constantly; we form the full symmetric

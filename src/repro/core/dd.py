@@ -76,6 +76,10 @@ class DD(NamedTuple):
     def reshape(self, *shape):
         return DD(self.hi.reshape(*shape), self.lo.reshape(*shape))
 
+    def limbs(self):
+        """Limb list, most-significant first (multi-limb-generic protocol)."""
+        return [self.hi, self.lo]
+
 
 def eps(dtype) -> float:
     """Unit roundoff of the DD format with the given limb dtype."""

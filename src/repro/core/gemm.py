@@ -1,26 +1,28 @@
-"""Backend dispatch for binary128-class GEMM — compatibility shim.
+"""Backend dispatch for extended-precision GEMM — compatibility shim.
 
 The real machinery lives in ``repro.gemm`` (the unified execution engine:
 plan -> autotune -> dispatch, see DESIGN.md §4).  This module keeps the
 original ``matmul(a, b, backend=...)`` surface for existing call sites and
 examples; new code should use ``repro.gemm.matmul`` / ``make_plan`` /
 ``execute`` directly, which also expose batched and multi-device sharded
-execution.
+execution and the precision ladder (DESIGN.md §8 — the engine infers
+``"dd"`` vs ``"qd"`` from the operand type).
 
-Backends (all produce DD results with ~2^-104-grade accumulation):
+Backends (dd tier ~2^-104-grade accumulation; qd tier ~2^-205):
 
-  pallas — the systolic-tile Pallas kernel (kernels/ddgemm.py); the paper's
-           design.  interpret-mode on CPU, native on TPU.
+  pallas — the systolic-tile Pallas kernels (kernels/ddgemm.py,
+           kernels/qdgemm.py); the paper's design.  interpret-mode on CPU,
+           native on TPU.
   ozaki  — error-free slicing onto native GEMMs (core/ozaki.py); the
            beyond-paper MXU path.  Fastest on both CPU (f64 XLA dot) and
-           TPU (bf16 MXU dot).
-  xla    — blocked jnp DD matmul (kernels/ops.matmul_dd_xla); portable
-           fallback.
-  ref    — O(m*k*n)-memory oracle (kernels/ref.py); tests only.
+           TPU (bf16 MXU dot).  dd tier only.
+  xla    — blocked jnp multi-limb matmul (kernels/ops.matmul_dd_xla /
+           matmul_qd_xla); portable fallback.
+  ref    — O(m*k*n)-memory oracles (kernels/ref.py); tests only.
 
-``auto`` picks ozaki (it rides the platform's native dot and is the fastest
-correct path everywhere); the paper-faithful kernel remains selectable per
-call or via REPRO_GEMM_BACKEND.
+``auto`` picks ozaki for dd (it rides the platform's native dot and is the
+fastest correct path everywhere) and xla for qd; the paper-faithful kernel
+remains selectable per call or via REPRO_GEMM_BACKEND.
 """
 
 from __future__ import annotations

@@ -1,4 +1,4 @@
-"""Binary128-class dense linear algebra on top of the DD GEMM (paper §V-A).
+"""Extended-precision dense linear algebra on top of the GEMM engine (§V-A).
 
 ``rgetrf`` is the blocked right-looking LU of MPLAPACK's Rgetrf exactly as
 the paper modifies it: panel factorization + triangular solve on the host
@@ -7,8 +7,16 @@ accelerated ``rgemm`` (step 5 of the paper's algorithm, the part it offloads
 to the FPGA).  ``rpotrf``/``rtrsm`` supply the Cholesky machinery the SDP
 solver (core/sdp.py) needs.
 
+Every routine is **limb-count generic**: matrices are multi-limb values
+(``dd.DD`` with 2 limbs or ``qd.QD`` with 4) and all arithmetic goes through
+``core.mp``, so the same blocked algorithms serve the binary128-class tier
+and the binary128+ (quad-limb) tier the SDP solver's hardest instances need.
+Structural work (slicing, masking, row swaps) is applied limb-wise — limbs
+are plain jnp arrays, so shape surgery is precision-agnostic.
+
 Panel/solve kernels are jitted with masked fori_loops (static shapes, traced
-indices); the outer block loop runs on the host like the paper's.
+indices); limb tuples are pytree arguments, so each limb count compiles its
+own specialization.  The outer block loop runs on the host like the paper's.
 """
 
 from __future__ import annotations
@@ -19,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import dd
+from . import mp
 from .blas import rgemm
 
 __all__ = [
@@ -33,114 +41,122 @@ __all__ = [
 ]
 
 
-def _dyn_cell(x: dd.DD, i, j) -> dd.DD:
-    hi = jax.lax.dynamic_slice(x.hi, (i, j), (1, 1))
-    lo = jax.lax.dynamic_slice(x.lo, (i, j), (1, 1))
-    return dd.DD(hi, lo)
+def _dyn(x, start, sizes):
+    """dynamic_slice applied limb-wise."""
+    return mp.map_limbs(lambda l: jax.lax.dynamic_slice(l, start, sizes), x)
 
 
-@functools.partial(jax.jit, static_argnames=())
-def rgetrf2(a_hi, a_lo):
+@jax.jit
+def _rgetrf2(a_limbs):
     """Unblocked LU with partial pivoting on an (m, nb) panel. Jitted.
 
-    Returns (lu_hi, lu_lo, piv) with piv[j] = row swapped with j at step j.
+    ``a_limbs`` is the panel's limb tuple (any supported count); returns
+    (limbs, piv) with piv[j] = row swapped with j at step j.
     """
-    m, nb = a_hi.shape
+    m, nb = a_limbs[0].shape
     rows = jnp.arange(m)
     cols = jnp.arange(nb)
 
     def step(j, carry):
-        hi, lo, piv = carry
-        col_hi = jax.lax.dynamic_slice(hi, (0, j), (m, 1))[:, 0]
+        limbs, piv = carry
+        col_hi = jax.lax.dynamic_slice(limbs[0], (0, j), (m, 1))[:, 0]
         cand = jnp.where(rows >= j, jnp.abs(col_hi), -1.0)
         p = jnp.argmax(cand)
-        # swap rows j <-> p
+        # swap rows j <-> p (limb-wise gather)
         idx = jnp.where(rows == j, p, jnp.where(rows == p, j, rows))
-        hi, lo = hi[idx], lo[idx]
+        limbs = tuple(l[idx] for l in limbs)
+        x = mp.from_limbs(limbs)
         piv = jnp.where(cols == j, p.astype(piv.dtype), piv)
-        pivot = _dyn_cell(dd.DD(hi, lo), j, j)  # (1,1)
-        col = dd.DD(
-            jax.lax.dynamic_slice(hi, (0, j), (m, 1)),
-            jax.lax.dynamic_slice(lo, (0, j), (m, 1)),
-        )
+        pivot = _dyn(x, (j, j), (1, 1))  # (1,1)
+        col = _dyn(x, (0, j), (m, 1))
         below = (rows > j)[:, None]
-        scaled = dd.div(col, dd.DD(jnp.broadcast_to(pivot.hi, col.shape),
-                                   jnp.broadcast_to(pivot.lo, col.shape)))
-        new_col = dd.where(below, scaled, col)
+        scaled = mp.div(col, mp.broadcast_to(pivot, col.shape))
+        new_col = mp.where(below, scaled, col)
         col_sel = (cols == j)[None, :]
-        hi = jnp.where(col_sel, new_col.hi, hi)
-        lo = jnp.where(col_sel, new_col.lo, lo)
+        limbs = tuple(
+            jnp.where(col_sel, nc, l)
+            for nc, l in zip(mp.limbs(new_col), limbs))
+        x = mp.from_limbs(limbs)
         # trailing rank-1 update: A[i, c] -= L[i, j] * U[j, c]  (i > j, c > j)
-        urow = dd.DD(
-            jax.lax.dynamic_slice(hi, (j, 0), (1, nb)),
-            jax.lax.dynamic_slice(lo, (j, 0), (1, nb)),
-        )
-        upd = dd.mul(new_col, urow)  # (m, nb) broadcast outer product
+        urow = _dyn(x, (j, 0), (1, nb))
+        upd = mp.mul(new_col, urow)  # (m, nb) broadcast outer product
         mask = below & (cols > j)[None, :]
-        cur = dd.DD(hi, lo)
-        newm = dd.sub(cur, upd)
-        hi = jnp.where(mask, newm.hi, hi)
-        lo = jnp.where(mask, newm.lo, lo)
-        return hi, lo, piv
+        newm = mp.sub(x, upd)
+        limbs = tuple(
+            jnp.where(mask, nm, l) for nm, l in zip(mp.limbs(newm), limbs))
+        return limbs, piv
 
     piv0 = jnp.zeros(nb, dtype=jnp.int32)
-    hi, lo, piv = jax.lax.fori_loop(0, min(m, nb), step, (a_hi, a_lo, piv0))
-    return hi, lo, piv
+    limbs, piv = jax.lax.fori_loop(
+        0, min(m, nb), step, (tuple(a_limbs), piv0))
+    return limbs, piv
 
 
-@functools.partial(jax.jit, static_argnames=("lower", "unit_diag", "transpose_a"))
-def _trsm(l_hi, l_lo, b_hi, b_lo, *, lower: bool, unit_diag: bool,
+def rgetrf2(a_hi, a_lo=None, *more_limbs):
+    """Unblocked panel LU.  Accepts either a multi-limb value or raw limbs.
+
+    ``rgetrf2(panel)`` returns ``(panel_lu, piv)``; the legacy spelling
+    ``rgetrf2(hi, lo)`` keeps returning ``(hi, lo, piv)``.
+    """
+    if a_lo is None and not more_limbs:
+        limbs, piv = _rgetrf2(tuple(mp.limbs(a_hi)))
+        return mp.from_limbs(limbs), piv
+    limbs, piv = _rgetrf2((a_hi, a_lo) + more_limbs)
+    return (*limbs, piv)
+
+
+@functools.partial(jax.jit, static_argnames=("lower", "unit_diag",
+                                             "transpose_a"))
+def _trsm(t_limbs, b_limbs, *, lower: bool, unit_diag: bool,
           transpose_a: bool):
     """Solve op(T) X = B for triangular T, forward/backward substitution."""
     if transpose_a:
-        l_hi, l_lo, lower = l_hi.T, l_lo.T, not lower
-    nb = l_hi.shape[0]
-    n = b_hi.shape[1]
-    t = dd.DD(l_hi, l_lo)
+        t_limbs = tuple(l.T for l in t_limbs)
+        lower = not lower
+    nb = t_limbs[0].shape[0]
+    n = b_limbs[0].shape[1]
+    t = mp.from_limbs(t_limbs)
+    b = mp.from_limbs(b_limbs)
+    prec = mp.precision_of(t)
+    dtype = t_limbs[0].dtype
     rows = jnp.arange(nb)
 
     def solve_row(i, carry):
-        x_hi, x_lo = carry
+        x = mp.from_limbs(carry)
         # i-th row of T, masked to the already-solved triangle
-        trow = dd.DD(
-            jax.lax.dynamic_slice(l_hi, (i, 0), (1, nb))[0],
-            jax.lax.dynamic_slice(l_lo, (i, 0), (1, nb))[0],
-        )
+        trow = mp.map_limbs(lambda l: l[0], _dyn(t, (i, 0), (1, nb)))  # (nb,)
         solved_mask = (rows < i) if lower else (rows > i)
-        tcol = dd.where(solved_mask[:, None], dd.DD(trow.hi[:, None], trow.lo[:, None]),
-                        dd.zeros((nb, 1)))
-        contrib = dd.sum_(dd.mul(tcol, dd.DD(x_hi, x_lo)), axis=0)  # (n,)
-        brow = dd.DD(
-            jax.lax.dynamic_slice(b_hi, (i, 0), (1, n))[0],
-            jax.lax.dynamic_slice(b_lo, (i, 0), (1, n))[0],
-        )
-        xi = dd.sub(brow, contrib)
+        tcol = mp.where(solved_mask[:, None],
+                        mp.map_limbs(lambda l: l[:, None], trow),
+                        mp.zeros((nb, 1), prec, dtype))
+        contrib = mp.sum_(mp.mul(tcol, x), axis=0)  # (n,)
+        brow = mp.map_limbs(lambda l: l[0], _dyn(b, (i, 0), (1, n)))
+        xi = mp.sub(brow, contrib)
         if not unit_diag:
-            piv = _dyn_cell(t, i, i)
-            xi = dd.div(xi, dd.DD(jnp.broadcast_to(piv.hi[0], xi.shape),
-                                  jnp.broadcast_to(piv.lo[0], xi.shape)))
+            piv = mp.map_limbs(lambda l: l[0], _dyn(t, (i, i), (1, 1)))
+            xi = mp.div(xi, mp.broadcast_to(piv, xi.shape))
         sel = (rows == i)[:, None]
-        x_hi = jnp.where(sel, xi.hi[None, :], x_hi)
-        x_lo = jnp.where(sel, xi.lo[None, :], x_lo)
-        return x_hi, x_lo
+        return tuple(
+            jnp.where(sel, nl[None, :], ol)
+            for nl, ol in zip(mp.limbs(xi), carry))
 
-    x0 = (jnp.zeros_like(b_hi), jnp.zeros_like(b_lo))
+    x0 = tuple(jnp.zeros_like(l) for l in b_limbs)
     if lower:
-        x_hi, x_lo = jax.lax.fori_loop(0, nb, solve_row, x0)
+        out = jax.lax.fori_loop(0, nb, solve_row, x0)
     else:
-        x_hi, x_lo = jax.lax.fori_loop(
+        out = jax.lax.fori_loop(
             0, nb, lambda k, c: solve_row(nb - 1 - k, c), x0)
-    return x_hi, x_lo
+    return out
 
 
-def rtrsm(t: dd.DD, b: dd.DD, *, lower: bool = True, unit_diag: bool = False,
-          transpose_a: bool = False) -> dd.DD:
-    hi, lo = _trsm(t.hi, t.lo, b.hi, b.lo, lower=lower, unit_diag=unit_diag,
-                   transpose_a=transpose_a)
-    return dd.DD(hi, lo)
+def rtrsm(t, b, *, lower: bool = True, unit_diag: bool = False,
+          transpose_a: bool = False):
+    out = _trsm(tuple(mp.limbs(t)), tuple(mp.limbs(b)), lower=lower,
+                unit_diag=unit_diag, transpose_a=transpose_a)
+    return mp.from_limbs(out)
 
 
-def apply_pivots(x: dd.DD, piv: np.ndarray, offset: int = 0) -> dd.DD:
+def apply_pivots(x, piv: np.ndarray, offset: int = 0):
     """Apply LAPACK-style sequential row interchanges piv (local indices)."""
     perm = np.arange(x.shape[0])
     for j, p in enumerate(np.asarray(piv)):
@@ -148,17 +164,17 @@ def apply_pivots(x: dd.DD, piv: np.ndarray, offset: int = 0) -> dd.DD:
         jj = j + offset
         perm[jj], perm[pj] = perm[pj], perm[jj]
     idx = jnp.asarray(perm)
-    return dd.DD(x.hi[idx], x.lo[idx])
+    return mp.map_limbs(lambda l: l[idx], x)
 
 
-def rgetrf(a: dd.DD, block: int = 64, plan=None, **plan_overrides):
+def rgetrf(a, block: int = 64, plan=None, **plan_overrides):
     """Blocked LU with partial pivoting (paper's Rgetrf, steps 1-6).
 
     Returns (lu, piv) with L\\U packed and piv the global LAPACK-style
     interchange vector.  The trailing updates go through the engine-planned
     ``rgemm``: each shrinking (m-p, nb, n-p) update shape is planned per
-    call, so tuned block entries from the autotune cache (bucketed by shape)
-    are reused across the sweep instead of hardcoded DEFAULT_BLOCKS.
+    call, so tuned block entries from the autotune cache (bucketed by shape
+    and limb count) are reused across the sweep instead of DEFAULT_BLOCKS.
     """
     m, n = a.shape
     assert m == n, "square only (paper's setting)"
@@ -166,101 +182,98 @@ def rgetrf(a: dd.DD, block: int = 64, plan=None, **plan_overrides):
     piv_global = np.zeros(n, dtype=np.int64)
     for p0 in range(0, n, block):
         nb = min(block, n - p0)
-        panel = dd.DD(lu.hi[p0:, p0:p0 + nb], lu.lo[p0:, p0:p0 + nb])
-        ph, plo, ppiv = rgetrf2(panel.hi, panel.lo)
+        panel = mp.map_limbs(lambda l: l[p0:, p0:p0 + nb], lu)
+        panel_lu, ppiv = rgetrf2(panel)
         ppiv = np.asarray(ppiv)
         piv_global[p0:p0 + nb] = ppiv + p0
         # apply the panel's row swaps to the columns outside the panel
-        rest = dd.DD(lu.hi[p0:, :], lu.lo[p0:, :])
+        rest = mp.map_limbs(lambda l: l[p0:, :], lu)
         rest = apply_pivots(rest, ppiv)
-        hi = rest.hi.at[:, p0:p0 + nb].set(ph)
-        lo = rest.lo.at[:, p0:p0 + nb].set(plo)
-        lu = dd.DD(
-            jnp.concatenate([lu.hi[:p0], hi], axis=0),
-            jnp.concatenate([lu.lo[:p0], lo], axis=0),
-        )
+        rest = mp.from_limbs([
+            rl.at[:, p0:p0 + nb].set(pl)
+            for rl, pl in zip(mp.limbs(rest), mp.limbs(panel_lu))
+        ])
+        lu = mp.from_limbs([
+            jnp.concatenate([top[:p0], bot], axis=0)
+            for top, bot in zip(mp.limbs(lu), mp.limbs(rest))
+        ])
         if p0 + nb < n:
-            l11 = dd.DD(lu.hi[p0:p0 + nb, p0:p0 + nb],
-                        lu.lo[p0:p0 + nb, p0:p0 + nb])
-            a12 = dd.DD(lu.hi[p0:p0 + nb, p0 + nb:],
-                        lu.lo[p0:p0 + nb, p0 + nb:])
+            l11 = mp.map_limbs(lambda l: l[p0:p0 + nb, p0:p0 + nb], lu)
+            a12 = mp.map_limbs(lambda l: l[p0:p0 + nb, p0 + nb:], lu)
             u12 = rtrsm(l11, a12, lower=True, unit_diag=True)
-            hi = lu.hi.at[p0:p0 + nb, p0 + nb:].set(u12.hi)
-            lo = lu.lo.at[p0:p0 + nb, p0 + nb:].set(u12.lo)
-            lu = dd.DD(hi, lo)
+            lu = mp.from_limbs([
+                ll.at[p0:p0 + nb, p0 + nb:].set(ul)
+                for ll, ul in zip(mp.limbs(lu), mp.limbs(u12))
+            ])
             # the accelerated step: A22 -= L21 @ U12
-            l21 = dd.DD(lu.hi[p0 + nb:, p0:p0 + nb],
-                        lu.lo[p0 + nb:, p0:p0 + nb])
-            a22 = dd.DD(lu.hi[p0 + nb:, p0 + nb:],
-                        lu.lo[p0 + nb:, p0 + nb:])
+            l21 = mp.map_limbs(lambda l: l[p0 + nb:, p0:p0 + nb], lu)
+            a22 = mp.map_limbs(lambda l: l[p0 + nb:, p0 + nb:], lu)
             upd = rgemm("n", "n", -1.0, l21, u12, 1.0, a22, plan=plan,
                         **plan_overrides)
-            hi = lu.hi.at[p0 + nb:, p0 + nb:].set(upd.hi)
-            lo = lu.lo.at[p0 + nb:, p0 + nb:].set(upd.lo)
-            lu = dd.DD(hi, lo)
+            lu = mp.from_limbs([
+                ll.at[p0 + nb:, p0 + nb:].set(ul)
+                for ll, ul in zip(mp.limbs(lu), mp.limbs(upd))
+            ])
     return lu, piv_global
 
 
-def lu_solve(lu: dd.DD, piv: np.ndarray, b: dd.DD) -> dd.DD:
+def lu_solve(lu, piv: np.ndarray, b):
     """Solve A x = b given rgetrf output (forward + backward substitution)."""
     n = lu.shape[0]
     perm = np.arange(n)
     for j, p in enumerate(np.asarray(piv)):
         perm[j], perm[p] = perm[p], perm[j]
     idx = jnp.asarray(perm)
-    pb = dd.DD(b.hi[idx], b.lo[idx])
+    pb = mp.map_limbs(lambda l: l[idx], b)
     y = rtrsm(lu, pb, lower=True, unit_diag=True)
     return rtrsm(lu, y, lower=False, unit_diag=False)
 
 
-@functools.partial(jax.jit, static_argnames=())
-def _potrf(a_hi, a_lo):
-    n = a_hi.shape[0]
+@jax.jit
+def _potrf(a_limbs):
+    n = a_limbs[0].shape[0]
+    a = mp.from_limbs(a_limbs)
+    prec = mp.precision_of(a)
+    dtype = a_limbs[0].dtype
     rows = jnp.arange(n)
 
     def step(j, carry):
-        l_hi, l_lo = carry
-        lmat = dd.DD(l_hi, l_lo)
+        lmat = mp.from_limbs(carry)
         # d = sqrt(a_jj - sum_{k<j} L[j,k]^2)
-        rowj = dd.DD(
-            jax.lax.dynamic_slice(l_hi, (j, 0), (1, n))[0],
-            jax.lax.dynamic_slice(l_lo, (j, 0), (1, n))[0],
-        )
-        maskk = (rows < j)
-        rowj = dd.where(maskk, rowj, dd.zeros((n,)))
-        s = dd.sum_(dd.mul(rowj, rowj), axis=0)
-        ajj = _dyn_cell(lmat, j, j)
-        d = dd.sqrt(dd.sub(dd.DD(ajj.hi[0, 0], ajj.lo[0, 0]), s))
+        rowj = mp.map_limbs(lambda l: l[0], _dyn(lmat, (j, 0), (1, n)))
+        maskk = rows < j
+        rowj = mp.where(maskk, rowj, mp.zeros((n,), prec, dtype))
+        s = mp.sum_(mp.mul(rowj, rowj), axis=0)
+        ajj = mp.map_limbs(lambda l: l[0, 0], _dyn(lmat, (j, j), (1, 1)))
+        d = mp.sqrt(mp.sub(ajj, s))
         # column below: L[i,j] = (A[i,j] - sum_k L[i,k] L[j,k]) / d
-        colA = dd.DD(
-            jax.lax.dynamic_slice(l_hi, (0, j), (n, 1))[:, 0],
-            jax.lax.dynamic_slice(l_lo, (0, j), (n, 1))[:, 0],
-        )
-        lik = dd.where(maskk[None, :], lmat, dd.zeros((n, n)))  # (n, k<j)
-        contrib = dd.sum_(dd.mul(lik, dd.DD(rowj.hi[None, :], rowj.lo[None, :])), axis=1)
-        num = dd.sub(colA, contrib)
-        col = dd.div(num, dd.DD(jnp.broadcast_to(d.hi, num.shape),
-                                jnp.broadcast_to(d.lo, num.shape)))
+        colA = mp.map_limbs(lambda l: l[:, 0], _dyn(lmat, (0, j), (n, 1)))
+        lik = mp.where(maskk[None, :], lmat, mp.zeros((n, n), prec, dtype))
+        contrib = mp.sum_(
+            mp.mul(lik, mp.map_limbs(lambda l: l[None, :], rowj)), axis=1)
+        num = mp.sub(colA, contrib)
+        col = mp.div(num, mp.broadcast_to(d, num.shape))
         below = rows > j
         diag = rows == j
-        new_hi = jnp.where(below, col.hi, jnp.where(diag, d.hi, 0.0))
-        new_lo = jnp.where(below, col.lo, jnp.where(diag, d.lo, 0.0))
+        new = mp.from_limbs([
+            jnp.where(below, cl, jnp.where(diag, dl, 0.0))
+            for cl, dl in zip(mp.limbs(col), mp.limbs(d))
+        ])
         sel = (rows == j)[None, :]
-        l_hi = jnp.where(sel, new_hi[:, None], l_hi)
-        l_lo = jnp.where(sel, new_lo[:, None], l_lo)
-        return l_hi, l_lo
+        return tuple(
+            jnp.where(sel, nl[:, None], ol)
+            for nl, ol in zip(mp.limbs(new), carry))
 
-    l_hi, l_lo = jax.lax.fori_loop(0, n, step, (a_hi, a_lo))
-    return jnp.tril(l_hi), jnp.tril(l_lo)
-
-
-def rpotrf(a: dd.DD) -> dd.DD:
-    """Lower Cholesky factor in DD arithmetic: A = L L^T."""
-    hi, lo = _potrf(a.hi, a.lo)
-    return dd.DD(hi, lo)
+    out = jax.lax.fori_loop(0, n, step, tuple(a_limbs))
+    return tuple(jnp.tril(l) for l in out)
 
 
-def cholesky_solve(l: dd.DD, b: dd.DD) -> dd.DD:
+def rpotrf(a):
+    """Lower Cholesky factor in multi-limb arithmetic: A = L L^T."""
+    return mp.from_limbs(_potrf(tuple(mp.limbs(a))))
+
+
+def cholesky_solve(l, b):
     """Solve (L L^T) x = b."""
     y = rtrsm(l, b, lower=True, unit_diag=False)
     return rtrsm(l, y, lower=True, unit_diag=False, transpose_a=True)

@@ -1,0 +1,163 @@
+"""Limb-count-generic multi-limb arithmetic — one API over DD and QD.
+
+The precision ladder (DESIGN.md §8) has one rung per limb count: ``dd``
+(2 limbs, ~106 mantissa bits over f64) and ``qd`` (4 limbs, ~212 bits).
+Algorithms above the arithmetic — blocked LU, TRSM, Cholesky, the GEMM
+engine's pad/batch/shard plumbing, the Rgemm epilogue — are identical at
+every rung; only the per-element ops differ.  This module is the seam: it
+dispatches on the concrete value type (``dd.DD`` | ``qd.QD``), so those
+layers are written once against ``mp.*`` and gain every future tier (df32
+QD on TPU, octuple) for free.
+
+Two op families:
+
+  * **arithmetic** (``add``/``mul``/``div``/``sqrt``/``sum_``/...) —
+    forwarded to the tier module, which owns the error-free transformations;
+  * **structural** (``map_limbs``/``where``/``broadcast_to``/slicing) —
+    applied limb-wise, since limbs are plain jnp arrays and shape surgery
+    is precision-agnostic.
+
+``PRECISIONS`` maps the plan-level precision names to limb counts; the GEMM
+plan/autotune cache keys on the limb count so each tier tunes independently.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import dd, qd
+
+__all__ = [
+    "PRECISIONS", "nlimbs", "precision_of", "limbs", "from_limbs",
+    "map_limbs", "from_float", "zeros", "to_float", "promote",
+    "add", "sub", "neg", "mul", "mul_float", "div", "sqrt",
+    "where", "sum_", "dot", "broadcast_to", "eps",
+]
+
+PRECISIONS = {"dd": 2, "qd": 4}
+
+
+def _mod(x):
+    if isinstance(x, dd.DD):
+        return dd
+    if isinstance(x, qd.QD):
+        return qd
+    raise TypeError(f"not a multi-limb value: {type(x).__name__}")
+
+
+def nlimbs(x) -> int:
+    return len(_mod_limbs(x))
+
+
+def _mod_limbs(x):
+    _mod(x)  # type check
+    return x.limbs()
+
+
+def precision_of(x) -> str:
+    return "dd" if isinstance(x, dd.DD) else (
+        "qd" if isinstance(x, qd.QD) else _raise(x))
+
+
+def _raise(x):
+    raise TypeError(f"not a multi-limb value: {type(x).__name__}")
+
+
+def limbs(x) -> list:
+    """Limb arrays, most-significant first."""
+    return _mod_limbs(x)
+
+
+def from_limbs(ls):
+    """Rebuild a tier value from its limb list (2 -> DD, 4 -> QD)."""
+    ls = list(ls)
+    if len(ls) == 2:
+        return dd.DD(*ls)
+    if len(ls) == 4:
+        return qd.QD(*ls)
+    raise ValueError(f"unsupported limb count {len(ls)} (want 2 or 4)")
+
+
+def map_limbs(f, x):
+    """Apply a structural (shape-only) function to every limb."""
+    return from_limbs([f(l) for l in limbs(x)])
+
+
+def from_float(x, precision: str = "dd", dtype=None):
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; "
+                         f"one of {sorted(PRECISIONS)}")
+    mod = dd if precision == "dd" else qd
+    return mod.from_float(x, dtype=dtype)
+
+
+def zeros(shape, precision: str = "dd", dtype=jnp.float64):
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}")
+    return (dd if precision == "dd" else qd).zeros(shape, dtype=dtype)
+
+
+def to_float(x):
+    return _mod(x).to_float(x)
+
+
+def promote(x, precision: str):
+    """Re-tier a value: dd -> qd pads zero limbs (exact); qd -> dd rounds."""
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; "
+                         f"one of {sorted(PRECISIONS)}")
+    cur = precision_of(x)
+    if cur == precision:
+        return x
+    return qd.from_dd(x) if precision == "qd" else qd.to_dd(x)
+
+
+def add(a, b):
+    return _mod(a).add(a, b)
+
+
+def sub(a, b):
+    return _mod(a).sub(a, b)
+
+
+def neg(a):
+    return _mod(a).neg(a)
+
+
+def mul(a, b):
+    return _mod(a).mul(a, b)
+
+
+def mul_float(a, s):
+    return _mod(a).mul_float(a, s)
+
+
+def div(a, b):
+    return _mod(a).div(a, b)
+
+
+def sqrt(a):
+    return _mod(a).sqrt(a)
+
+
+def where(c, a, b):
+    return _mod(a).where(c, a, b)
+
+
+def sum_(a, axis=None, keepdims=False):
+    return _mod(a).sum_(a, axis=axis, keepdims=keepdims)
+
+
+def dot(a, b):
+    return _mod(a).dot(a, b)
+
+
+def broadcast_to(x, shape):
+    return map_limbs(lambda l: jnp.broadcast_to(l, shape), x)
+
+
+def eps(precision: str, dtype=jnp.float64) -> float:
+    """Unit roundoff of a tier: 2^-2p for dd, 2^-4p for qd."""
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}")
+    return (dd if precision == "dd" else qd).eps(dtype)

@@ -22,7 +22,9 @@ import jax.numpy as jnp
 
 from .efts import quick_two_sum, two_prod_terms, two_sum
 
-__all__ = ["QD", "from_float", "from_dd", "to_float", "to_dd", "add", "sub", "mul", "neg", "fma", "renorm_list"]
+__all__ = ["QD", "from_float", "from_dd", "to_float", "to_dd", "zeros",
+           "add", "sub", "mul", "mul_float", "mul_pow2", "neg", "fma",
+           "div", "sqrt", "where", "sum_", "dot", "eps", "renorm_list"]
 
 
 class QD(NamedTuple):
@@ -41,6 +43,18 @@ class QD(NamedTuple):
 
     def limbs(self):
         return [self.x0, self.x1, self.x2, self.x3]
+
+    def __getitem__(self, idx):
+        return QD(self.x0[idx], self.x1[idx], self.x2[idx], self.x3[idx])
+
+    def reshape(self, *shape):
+        return QD(*[l.reshape(*shape) for l in self.limbs()])
+
+
+def eps(dtype) -> float:
+    """Unit roundoff of the QD format with the given limb dtype."""
+    p = 53 if jnp.dtype(dtype) == jnp.float64 else 24
+    return 2.0 ** (-4 * p)
 
 
 def from_float(x, dtype=None) -> QD:
@@ -65,8 +79,17 @@ def to_dd(q: QD):
     return _dd.DD(*quick_two_sum(s, e + (q.x2 + q.x3)))
 
 
+def zeros(shape, dtype=jnp.float64) -> QD:
+    z = jnp.zeros(shape, dtype=dtype)
+    return QD(z, z, z, z)
+
+
 def neg(q: QD) -> QD:
     return QD(-q.x0, -q.x1, -q.x2, -q.x3)
+
+
+def where(c, a: QD, b: QD) -> QD:
+    return QD(*[jnp.where(c, x, y) for x, y in zip(a.limbs(), b.limbs())])
 
 
 def _vecsum_bottom_up(limbs: Sequence) -> list:
@@ -141,5 +164,84 @@ def mul(a: QD, b: QD) -> QD:
     return QD(*renorm_list(terms, k=4, sweeps=3))
 
 
+def mul_float(a: QD, b) -> QD:
+    """QD * plain-float array.  Exact partial products through limb 2,
+    distilled; cheaper than lifting ``b`` to QD for a full ``mul``."""
+    b = jnp.asarray(b, a.dtype)
+    terms = []
+    for l in (a.x0, a.x1, a.x2):
+        terms.extend(two_prod_terms(l, b))
+    terms.append(a.x3 * b)
+    return QD(*renorm_list(terms, k=4, sweeps=3))
+
+
+def mul_pow2(a: QD, s) -> QD:
+    """Exact scaling by a power of two."""
+    return QD(*[l * s for l in a.limbs()])
+
+
 def fma(acc: QD, a: QD, b: QD) -> QD:
     return add(acc, mul(a, b))
+
+
+def div(a: QD, b: QD) -> QD:
+    """Long-division QD / QD: five native-quotient correction rounds.
+
+    Each round contributes ~53 bits of quotient (q_i = r.x0 / b.x0, then the
+    remainder is updated exactly-ish via ``mul_float``), so five rounds
+    overshoot the 212-bit format; the distilled q_i are the result.  Branch
+    free, like everything in this module.
+    """
+    q_terms = []
+    r = a
+    for _ in range(5):
+        qi = r.x0 / b.x0
+        q_terms.append(qi)
+        r = sub(r, mul_float(b, qi))
+    return QD(*renorm_list(q_terms, k=4, sweeps=3))
+
+
+def sqrt(a: QD) -> QD:
+    """QD sqrt: DD seed (~106 bits) + one Heron step s <- (s + a/s)/2.
+
+    Newton doubles the correct bits, so one step lands at ~212 — the format's
+    capacity.  Zero is guarded (the seed's 1/sqrt would inf*0 -> nan).
+    """
+    from . import dd as _dd
+
+    s0 = from_dd(_dd.sqrt(to_dd(a)))
+    s = mul_pow2(add(s0, div(a, s0)), 0.5)
+    zero = a.x0 == 0
+    return QD(*[jnp.where(zero, jnp.zeros_like(l), l) for l in s.limbs()])
+
+
+def sum_(a: QD, axis=None, keepdims=False) -> QD:
+    """Compensated reduction along an axis by repeated halving (every
+    partial stays a full QD expansion, mirroring dd.sum_)."""
+    if axis is None:
+        flat = QD(*[l.reshape(-1) for l in a.limbs()])
+        return sum_(flat, axis=0, keepdims=keepdims)
+    cur = QD(*[jnp.moveaxis(l, axis, 0) for l in a.limbs()])
+    m = cur.x0.shape[0]
+    while m > 1:
+        half = m // 2
+        even = QD(*[l[: 2 * half : 2] for l in cur.limbs()])
+        odd = QD(*[l[1 : 2 * half : 2] for l in cur.limbs()])
+        red = add(even, odd)
+        if m % 2:
+            tail = QD(*[
+                jnp.concatenate([l[-1:], jnp.zeros_like(r[1:])], 0)
+                for l, r in zip(cur.limbs(), red.limbs())
+            ])
+            red = add(red, tail)
+        cur = red
+        m = half
+    out = QD(*[l[0] for l in cur.limbs()])
+    if keepdims:
+        out = QD(*[jnp.expand_dims(l, axis) for l in out.limbs()])
+    return out
+
+
+def dot(a: QD, b: QD) -> QD:
+    """Inner product of two QD vectors with QD accumulation."""
+    return sum_(mul(a, b), axis=0)

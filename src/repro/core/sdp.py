@@ -4,10 +4,15 @@ Reproduces the paper's §V-B: an SDPA-style Mehrotra predictor-corrector
 PDIPM (HRVW/KSH search direction) whose linear algebra is *precision
 parameterized* — ``double`` runs on plain f64, ``binary128`` routes every
 GEMM / Cholesky / Schur solve through the DD engine (the paper's accelerated
-Rgemm + MPLAPACK stack).  The headline claim this reproduces is Table V: in
-double precision the relative gap stalls near 1e-8 because X and Z go
-singular at the optimum [Nakata 2010]; in binary128-class arithmetic the
-same algorithm pushes gaps to ~1e-25.  Crucially the m x m Schur system is
+Rgemm + MPLAPACK stack), and ``binary128+`` routes the same pipeline through
+the quad-word (4-limb, ~212-bit) tier for instances where the paper's
+"binary128 **or higher**" clause bites.  The headline claim this reproduces
+is Table V: in double precision the relative gap stalls near 1e-8 because X
+and Z go singular at the optimum [Nakata 2010]; in binary128-class
+arithmetic the same algorithm pushes gaps to ~1e-25 — and where a
+degenerate Schur system floors the dd tier itself (observed 1.3e-24 at
+cond(B)~1e10), the qd tier keeps descending (observed 8.9e-28; see
+tests/test_sdp.py).  Crucially the m x m Schur system is
 also solved in extended precision — near the optimum cond(B) ~ 1/mu^2, so a
 double-precision Schur solve caps the achievable gap; this is exactly why
 SDPA-GMP/-DD route *all* BLAS through the high-precision backend.
@@ -48,7 +53,7 @@ import numpy as np
 
 from repro.gemm import matmul as dd_matmul
 
-from . import dd
+from . import dd, mp, qd
 from .blas import transpose
 from .linalg import cholesky_solve, rpotrf
 
@@ -125,56 +130,78 @@ class _F64Ops:
         return float(jnp.abs(a).max())
 
 
-class _DDOps:
-    name = "binary128"
+# jitted multi-limb kernels shared by the dd/qd ops backends: one PDIPM
+# iteration otherwise dispatches thousands of tiny eager jnp ops (a qd.add
+# alone is ~300), which dominates wall time at SDP-test sizes.  Shapes are
+# stable across iterations, so each (function, shape, limb-count) traces
+# once.  mp dispatches on the operand type inside the trace.
+_ml_add = jax.jit(mp.add)
+_ml_sub = jax.jit(mp.sub)
+_ml_smul_ml = jax.jit(lambda s, a: mp.mul(mp.broadcast_to(s, a.shape), a))
+_ml_smul_f = jax.jit(mp.mul_float)
+_ml_trace_dot = jax.jit(lambda a, b: mp.sum_(mp.mul(a, b)))
+
+
+@jax.jit
+def _ml_stack_trace(stack, mat):
+    m = stack.shape[0]
+    tm = mp.map_limbs(lambda l: jnp.swapaxes(l, -1, -2), mat)
+    prod = mp.mul(stack, mp.map_limbs(lambda l: l[None], tm))
+    return mp.sum_(prod.reshape(m, -1), axis=1)
+
+
+@jax.jit
+def _ml_combine(vec, stack):
+    w = mp.map_limbs(lambda l: l[:, None, None], vec)
+    return mp.sum_(mp.mul(w, stack), axis=0)
+
+
+@jax.jit
+def _ml_pairwise_trace(stack, vstack):
+    m = stack.shape[0]
+    a = mp.map_limbs(lambda l: l[:, None], stack)               # (m,1,n,n)
+    vt = mp.map_limbs(lambda l: jnp.swapaxes(l, -1, -2), vstack)
+    v = mp.map_limbs(lambda l: l[None, :], vt)                  # (1,m,n,n)
+    prod = mp.mul(a, v)
+    return mp.sum_(prod.reshape(m, m, -1), axis=2)
+
+
+class _MLOps:
+    """Shared multi-limb ops backend; subclasses fix the tier module."""
+
+    mod = dd  # overridden
 
     def __init__(self, plan_overrides: dict | None = None):
         # planner overrides, not a hand-threaded backend string: the engine
-        # plans each call from shape/platform and these pins (default xla —
-        # see the module docstring's Ozaki scaling caveat).  An explicit {}
-        # means "no pins": full auto planning.
+        # plans each call from shape/platform/operand tier and these pins
+        # (default xla — see the module docstring's Ozaki scaling caveat).
+        # An explicit {} means "no pins": full auto planning.
         self.plan_overrides = dict(plan_overrides) if plan_overrides is not None \
             else {"backend": "xla"}
 
     def wrap(self, a_np):
-        return dd.from_float(jnp.asarray(a_np, jnp.float64))
+        return self.mod.from_float(jnp.asarray(a_np, jnp.float64))
 
     def eye(self, n, scale=1.0):
-        return dd.from_float(jnp.eye(n, dtype=jnp.float64) * scale)
+        return self.mod.from_float(jnp.eye(n, dtype=jnp.float64) * scale)
 
     def matmul(self, a, b):
         # (..., n, n) leading batch dims route through the engine's vmapped
         # batched path — the per-constraint stacks run as one call
         return dd_matmul(a, b, **self.plan_overrides)
 
-    add = staticmethod(dd.add)
-    sub = staticmethod(dd.sub)
+    add = staticmethod(_ml_add)
+    sub = staticmethod(_ml_sub)
 
     def smul(self, s, a):
-        if isinstance(s, dd.DD):
-            return dd.mul(dd.DD(jnp.broadcast_to(s.hi, a.shape),
-                                jnp.broadcast_to(s.lo, a.shape)), a)
-        return dd.mul_float(a, jnp.float64(s))
+        if isinstance(s, (dd.DD, qd.QD)):
+            return _ml_smul_ml(mp.promote(s, mp.precision_of(a)), a)
+        return _ml_smul_f(a, jnp.float64(s))
 
-    def trace_dot(self, a, b):
-        return dd.sum_(dd.mul(a, b))
-
-    def stack_trace(self, stack: dd.DD, mat: dd.DD) -> dd.DD:
-        m = stack.shape[0]
-        prod = dd.mul(stack, dd.DD(self.t(mat).hi[None], self.t(mat).lo[None]))
-        return dd.sum_(prod.reshape(m, -1), axis=1)
-
-    def combine(self, vec: dd.DD, stack: dd.DD) -> dd.DD:
-        w = dd.DD(vec.hi[:, None, None], vec.lo[:, None, None])
-        return dd.sum_(dd.mul(w, stack), axis=0)
-
-    def pairwise_trace(self, stack: dd.DD, vstack: dd.DD) -> dd.DD:
-        m = stack.shape[0]
-        a = dd.DD(stack.hi[:, None], stack.lo[:, None])         # (m,1,n,n)
-        vt = self.t(vstack)
-        v = dd.DD(vt.hi[None, :], vt.lo[None, :])               # (1,m,n,n)
-        prod = dd.mul(a, v)
-        return dd.sum_(prod.reshape(m, m, -1), axis=2)
+    trace_dot = staticmethod(_ml_trace_dot)
+    stack_trace = staticmethod(_ml_stack_trace)
+    combine = staticmethod(_ml_combine)
+    pairwise_trace = staticmethod(_ml_pairwise_trace)
 
     def chol(self, a):
         return rpotrf(a)
@@ -182,30 +209,46 @@ class _DDOps:
     def chol_solve(self, l, b):
         return cholesky_solve(l, b)
 
-    def solve_spd(self, bmat: dd.DD, rhs: dd.DD) -> dd.DD:
+    def solve_spd(self, bmat, rhs):
         l = rpotrf(bmat)
-        sol = cholesky_solve(l, dd.DD(rhs.hi[:, None], rhs.lo[:, None]))
-        return dd.DD(sol.hi[:, 0], sol.lo[:, 0])
+        sol = cholesky_solve(l, mp.map_limbs(lambda x: x[:, None], rhs))
+        return mp.map_limbs(lambda x: x[:, 0], sol)
 
-    def t(self, a: dd.DD) -> dd.DD:
-        if a.hi.ndim == 2:
-            return transpose(a)
-        return dd.DD(jnp.swapaxes(a.hi, -1, -2), jnp.swapaxes(a.lo, -1, -2))
+    def t(self, a):
+        return transpose(a)
 
     def to_float(self, a) -> float:
-        return float(np.asarray(dd.to_float(a)))
+        return float(np.asarray(mp.to_float(a)))
 
     def to_np(self, a):
-        return np.asarray(dd.to_float(a), np.float64)
+        return np.asarray(mp.to_float(a), np.float64)
 
     def has_nan(self, a) -> bool:
-        return bool(jnp.isnan(a.hi).any() | jnp.isnan(a.lo).any())
+        return bool(np.any([jnp.isnan(l).any() for l in mp.limbs(a)]))
 
     def scalar(self, x: float):
-        return dd.from_float(jnp.float64(x))
+        return self.mod.from_float(jnp.float64(x))
 
     def max_abs(self, a) -> float:
-        return float(np.abs(np.asarray(dd.to_float(a))).max())
+        return float(np.abs(np.asarray(mp.to_float(a))).max())
+
+
+class _DDOps(_MLOps):
+    """binary128 backend: double-word (~106-bit) limbs, the paper's tier."""
+
+    name = "binary128"
+    mod = dd
+
+
+class _QDOps(_MLOps):
+    """binary128+ backend: quad-word (~212-bit) limbs for instances where
+    the dd tier's Schur-solve noise floors the gap.  The engine infers
+    ``precision="qd"`` from the operand type; the Ozaki caveat does not
+    arise (the qd tier has no ozaki path), but backend="xla" is still
+    pinned so plans skip the per-call env/default resolution."""
+
+    name = "binary128+"
+    mod = qd
 
 
 def _ops(precision: str, gemm_overrides: dict | None = None):
@@ -213,6 +256,8 @@ def _ops(precision: str, gemm_overrides: dict | None = None):
         return _F64Ops()
     if precision in ("binary128", "dd", "dd64"):
         return _DDOps(gemm_overrides)
+    if precision in ("binary128+", "qd", "qd64"):
+        return _QDOps(gemm_overrides)
     raise ValueError(f"unknown precision {precision!r}")
 
 
@@ -255,11 +300,19 @@ class SDPResult:
     history: list
 
 
-def random_sdp(n: int, m: int, seed: int = 0, rank: int | None = None) -> SDPProblem:
+def random_sdp(n: int, m: int, seed: int = 0, rank: int | None = None,
+               degeneracy: float = 0.0) -> SDPProblem:
     """Random SDP with a KNOWN strictly-complementary optimal pair.
 
     X* = Q diag(lam, 0) Q^T (rank r), Z* = Q diag(0, omega) Q^T, X* Z* = 0;
     b_i = A_i . X*, C = Z* + sum_i y*_i A_i  ==> opt = C . X* = b^T y*.
+
+    ``degeneracy`` > 0 makes A_2 nearly parallel to A_1 (A_2 <- A_1 + eps*G):
+    the Schur complement B_ij = tr(A_i X A_j Z^-1) then carries cond(B) ~
+    1/degeneracy^2, which floors the achievable gap of a tier at roughly
+    eps_tier * cond(B) — the paper's §V-B motivation ("binary128 or higher")
+    as a dial.  b/C are computed AFTER the perturbation, so the optimal
+    certificate stays exact.
     """
     rng = np.random.default_rng(seed)
     r = rank if rank is not None else max(1, n // 2)
@@ -272,6 +325,8 @@ def random_sdp(n: int, m: int, seed: int = 0, rank: int | None = None) -> SDPPro
     for _ in range(m):
         g = rng.standard_normal((n, n))
         a_mats.append((g + g.T) / 2)
+    if degeneracy and m >= 2:
+        a_mats[1] = a_mats[0] + degeneracy * a_mats[1]
     y_star = rng.standard_normal(m)
     b = np.array([np.sum(ai * x_star) for ai in a_mats])
     c = z_star + sum(yi * ai for yi, ai in zip(y_star, a_mats))
@@ -328,12 +383,16 @@ def solve_sdp(prob: SDPProblem, *, precision: str = "binary128",
               verbose: bool = False) -> SDPResult:
     """SDPA-style Mehrotra predictor-corrector PDIPM (precision-generic).
 
-    ``gemm_overrides`` feeds the GEMM engine's planner for every binary128
-    product (default pins backend="xla"; see the Ozaki caveat above).
+    ``precision`` picks the arithmetic ladder rung: ``"double"`` (f64),
+    ``"binary128"`` (dd, ~106 bits), or ``"binary128+"`` (qd, ~212 bits).
+    ``gemm_overrides`` feeds the GEMM engine's planner for every extended-
+    precision product (default pins backend="xla"; see the Ozaki caveat
+    above — the engine infers the limb count from the operand type).
     """
     ops = _ops(precision, gemm_overrides)
     if tol_gap is None:
-        tol_gap = 1e-25 if ops.name == "binary128" else 1e-12
+        tol_gap = {"binary128+": 1e-40, "binary128": 1e-25}.get(
+            ops.name, 1e-12)
     n, m = prob.n, prob.m
 
     c = ops.wrap(prob.c)
@@ -455,17 +514,15 @@ def solve_sdp(prob: SDPProblem, *, precision: str = "binary128",
 
 def _hstack(ops, astack, n: int, m: int):
     """(m,n,n) -> (n, m*n) horizontal concat of the A_j."""
-    if isinstance(astack, dd.DD):
-        hi = jnp.transpose(astack.hi, (1, 0, 2)).reshape(n, m * n)
-        lo = jnp.transpose(astack.lo, (1, 0, 2)).reshape(n, m * n)
-        return dd.DD(hi, lo)
-    return jnp.transpose(astack, (1, 0, 2)).reshape(n, m * n)
+    f = lambda x: jnp.transpose(x, (1, 0, 2)).reshape(n, m * n)  # noqa: E731
+    if isinstance(astack, (dd.DD, qd.QD)):
+        return mp.map_limbs(f, astack)
+    return f(astack)
 
 
 def _unstack(ops, v, n: int, m: int):
     """(n, m*n) -> (m, n, n)."""
-    if isinstance(v, dd.DD):
-        hi = jnp.transpose(v.hi.reshape(n, m, n), (1, 0, 2))
-        lo = jnp.transpose(v.lo.reshape(n, m, n), (1, 0, 2))
-        return dd.DD(hi, lo)
-    return jnp.transpose(v.reshape(n, m, n), (1, 0, 2))
+    f = lambda x: jnp.transpose(x.reshape(n, m, n), (1, 0, 2))  # noqa: E731
+    if isinstance(v, (dd.DD, qd.QD)):
+        return mp.map_limbs(f, v)
+    return f(v)

@@ -7,21 +7,23 @@ matmul in the repo funnels through:
     plan  = make_plan(m, k, n, dtype=..., backend=..., mesh=...)
     c     = execute(plan, a, b)         # or matmul(a, b, ...) to do both
 
-``make_plan`` picks the backend (pallas | ozaki | xla | ref), block shapes
-(tuned cache > heuristics), limb/slice dtypes per platform, and the batch /
-sharding strategy.  ``autotune`` sweeps block shapes with the paper's
-resource models and persists winners on disk keyed by (shape-bucket, dtype,
-platform).  See DESIGN.md §4 for the full flow.
+``make_plan`` picks the precision tier (dd = 2-limb binary128 class |
+qd = 4-limb binary128+), the backend (pallas | ozaki | xla | ref), block
+shapes (tuned cache > heuristics), limb/slice dtypes per platform, and the
+batch / sharding strategy.  ``autotune`` sweeps block shapes with the
+paper's resource models and persists winners on disk keyed by
+(shape-bucket, dtype, limb count, platform), so each precision tier tunes
+its own tiles.  See DESIGN.md §4 (flow) and §8 (precision ladder).
 """
 
-from .plan import BACKENDS, GemmPlan, make_plan, resolve_backend
+from .plan import BACKENDS, PRECISIONS, GemmPlan, make_plan, resolve_backend
 from .engine import execute, matmul
 from .autotune import autotune, candidate_blocks, vmem_bytes
 from .cache import PlanCache, cache_key, default_cache, set_default_cache, \
     shape_bucket
 
 __all__ = [
-    "BACKENDS", "GemmPlan", "make_plan", "resolve_backend",
+    "BACKENDS", "PRECISIONS", "GemmPlan", "make_plan", "resolve_backend",
     "execute", "matmul",
     "autotune", "candidate_blocks", "vmem_bytes",
     "PlanCache", "cache_key", "default_cache", "set_default_cache",

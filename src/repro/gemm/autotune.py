@@ -29,9 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dd
+from repro.core import mp
 from . import cache as plan_cache
-from .plan import GemmPlan, _clamp_blocks, make_plan, resolve_backend
+from .plan import GemmPlan, PRECISIONS, _clamp_blocks, make_plan, \
+    resolve_backend
 
 __all__ = [
     "autotune", "candidate_blocks", "vmem_bytes", "bandwidth_req_gbps",
@@ -53,9 +54,10 @@ _SWEEP: Tuple[Tuple[int, int, int], ...] = (
 )
 
 
-def vmem_bytes(bm: int, bn: int, bk: int, limb_bytes: int = 4) -> int:
-    # a-tile + b-tile + 2 accumulators, 2 limbs each
-    return 2 * limb_bytes * (bm * bk + bk * bn + 2 * bm * bn)
+def vmem_bytes(bm: int, bn: int, bk: int, limb_bytes: int = 4,
+               nlimbs: int = 2) -> int:
+    # a-tile + b-tile + 2 accumulators, one plane per limb
+    return nlimbs * limb_bytes * (bm * bk + bk * bn + 2 * bm * bn)
 
 
 def bandwidth_req_gbps(bm: int, bn: int, f_peak_flops: float) -> float:
@@ -68,8 +70,12 @@ def f_peak_gflops() -> float:
 
 
 def candidate_blocks(m: int, k: int, n: int,
-                     limb_bytes: int = 4) -> List[dict]:
-    """Sweep candidates clamped to the problem and filtered by VMEM fit."""
+                     limb_bytes: int = 4, nlimbs: int = 2) -> List[dict]:
+    """Sweep candidates clamped to the problem and filtered by VMEM fit.
+
+    The fit model scales with the limb count, so the qd tier's feasible set
+    is roughly the dd set shrunk one tile size — tuned independently.
+    """
     out, seen = [], set()
     for bm, bn, bk in _SWEEP:
         blk = _clamp_blocks(m, k, n, {"bm": bm, "bn": bn, "bk": bk})
@@ -77,7 +83,8 @@ def candidate_blocks(m: int, k: int, n: int,
         if key in seen:
             continue
         seen.add(key)
-        if vmem_bytes(**blk, limb_bytes=limb_bytes) < VMEM_BYTES:
+        if vmem_bytes(**blk, limb_bytes=limb_bytes,
+                      nlimbs=nlimbs) < VMEM_BYTES:
             out.append(blk)
     return out
 
@@ -94,40 +101,43 @@ def _time_once(fn, warmup: int = 1, iters: int = 2) -> float:
 
 
 def autotune(m: int, k: int, n: int, *, dtype=jnp.float64,
-             backend: str = "pallas",
+             precision: str = "dd", backend: str = "pallas",
              candidates: Optional[Sequence[dict]] = None,
              cache: Optional[plan_cache.PlanCache] = None,
              seed: int = 0, iters: int = 2, persist: bool = True) -> GemmPlan:
     """Sweep block shapes on live data, persist the winner, return its plan.
 
-    Returns the tuned ``GemmPlan`` for the (m, k, n) problem; subsequent
-    ``make_plan`` calls in the same shape bucket pick the entry up from the
-    cache automatically.
+    Returns the tuned ``GemmPlan`` for the (m, k, n) problem at the given
+    precision tier; subsequent ``make_plan`` calls in the same (shape
+    bucket, limb count) pick the entry up from the cache automatically.
     """
     dtype = jnp.dtype(dtype)
+    nlimbs = PRECISIONS[precision]
     backend = resolve_backend(backend)  # key the cache on the resolved name
     cache = cache or plan_cache.default_cache()
     candidates = list(candidates) if candidates is not None \
-        else candidate_blocks(m, k, n, limb_bytes=dtype.itemsize)
+        else candidate_blocks(m, k, n, limb_bytes=dtype.itemsize,
+                              nlimbs=nlimbs)
     if not candidates:
         raise ValueError(f"no feasible block candidates for {(m, k, n)}")
 
     from . import engine
 
     rng = np.random.default_rng(seed)
-    a = dd.from_float(jnp.asarray(rng.random((m, k)) - 0.5, dtype))
-    b = dd.from_float(jnp.asarray(rng.random((k, n)) - 0.5, dtype))
+    a = mp.from_float(jnp.asarray(rng.random((m, k)) - 0.5, dtype), precision)
+    b = mp.from_float(jnp.asarray(rng.random((k, n)) - 0.5, dtype), precision)
 
     best, best_t = None, float("inf")
     for blk in candidates:
-        plan = make_plan(m, k, n, dtype=dtype, backend=backend,
-                         use_cache=False, **blk)
+        plan = make_plan(m, k, n, dtype=dtype, precision=precision,
+                         backend=backend, use_cache=False, **blk)
         t = _time_once(lambda: engine.execute(plan, a, b), iters=iters)
         if t < best_t:
             best, best_t = plan, t
 
     if persist:
-        key = plan_cache.cache_key(best.platform, dtype.name, m, k, n, backend)
+        key = plan_cache.cache_key(best.platform, dtype.name, m, k, n,
+                                   backend, nlimbs=nlimbs)
         cache.put(key, {"bm": best.bm, "bn": best.bn, "bk": best.bk,
                         "us_per_call": best_t * 1e6,
                         "bucket": plan_cache.shape_bucket(m, k, n)})

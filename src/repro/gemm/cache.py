@@ -22,6 +22,7 @@ import json
 import os
 import tempfile
 import threading
+import warnings
 from typing import Optional
 
 __all__ = ["PlanCache", "default_cache", "set_default_cache", "shape_bucket",
@@ -41,8 +42,16 @@ def shape_bucket(m: int, k: int, n: int) -> str:
 
 
 def cache_key(platform: str, dtype_name: str, m: int, k: int, n: int,
-              backend: str) -> str:
-    return f"{platform}/{dtype_name}/{shape_bucket(m, k, n)}/{backend}"
+              backend: str, nlimbs: int = 2) -> str:
+    """Cache key for one tuning bucket.
+
+    Keys on the limb count so precision tiers tune independently (a QD tile
+    streams twice the limb planes of a DD tile and wants different blocks).
+    The 2-limb spelling is kept limb-suffix-free for compatibility with
+    caches written before the precision axis existed.
+    """
+    dt = dtype_name if nlimbs == 2 else f"{dtype_name}x{nlimbs}"
+    return f"{platform}/{dt}/{shape_bucket(m, k, n)}/{backend}"
 
 
 class PlanCache:
@@ -58,15 +67,31 @@ class PlanCache:
         if self._mem is None:
             try:
                 with open(self.path) as f:
-                    self._mem = json.load(f)
-            except (OSError, ValueError):
-                self._mem = {}
+                    data = json.load(f)
+            except OSError:
+                data = {}  # no cache yet: the normal cold-start path
+            except ValueError as e:
+                # a corrupt/truncated file (killed writer, hand edit, disk
+                # hiccup) must cost a warning and a retune, never an
+                # exception in every GEMM that consults the cache
+                warnings.warn(
+                    f"ignoring corrupt GEMM plan cache {self.path!r} "
+                    f"({e}); plans fall back to heuristics until re-tuned",
+                    RuntimeWarning, stacklevel=3)
+                data = {}
+            if not isinstance(data, dict):
+                warnings.warn(
+                    f"GEMM plan cache {self.path!r} is not a JSON object "
+                    f"(got {type(data).__name__}); ignoring it",
+                    RuntimeWarning, stacklevel=3)
+                data = {}
+            self._mem = data
         return self._mem
 
     def get(self, key: str) -> Optional[dict]:
         with self._lock:
             entry = self._load().get(key)
-        return dict(entry) if entry else None
+        return dict(entry) if isinstance(entry, dict) else None
 
     def put(self, key: str, entry: dict) -> None:
         with self._lock:

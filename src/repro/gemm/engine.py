@@ -1,7 +1,10 @@
 """Execution engine: one dispatcher for every extended-precision GEMM.
 
-``execute(plan, a, b)`` routes a planned workload to its backend kernel and
-adds the two capabilities the per-call dispatch never had:
+``execute(plan, a, b)`` routes a planned workload to its backend kernel.
+Operands are multi-limb struct-of-arrays values — ``dd.DD`` for the
+``precision="dd"`` tier (2 limbs, binary128 class) or ``qd.QD`` for
+``precision="qd"`` (4 limbs, binary128+) — and every capability of the
+engine is limb-count generic:
 
   * **batched GEMM** — leading batch dimensions on either operand are
     flattened and vmapped over the planned 2-D kernel, so SDP's
@@ -13,22 +16,23 @@ adds the two capabilities the per-call dispatch never had:
     (``P(axis, None)``) — no all-gather on the result, matching the paper's
     Feed/Drain streaming where C' tiles drain independently.
 
-The backend kernels themselves are unchanged: the Pallas systolic tile
-(``kernels/ddgemm.py``), the Ozaki slicing path (``core/ozaki.py``), the
-blocked-XLA fallback and the O(m*k*n) oracle.  Padding to block multiples is
-exact in DD arithmetic (zeros carry no rounding), so the engine owns all
-pad/clamp/slice logic that used to live in ``kernels/ops.py``.
+Backend kernels per tier: the Pallas systolic tile (``kernels/ddgemm.py`` /
+``kernels/qdgemm.py`` — same tile schedule, 2 vs 4 limb planes), the
+blocked-XLA fallbacks, the O(m*k*n) oracles, and — dd only — the Ozaki
+slicing path.  Padding to block multiples is exact in multi-limb arithmetic
+(zeros carry no rounding), so the engine owns all pad/clamp/slice logic.
 """
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import dd
+from repro.core import mp
 from .plan import GemmPlan, make_plan, round_up as _round_up
 
 __all__ = ["execute", "matmul"]
@@ -42,14 +46,16 @@ def _pad_to(x, rows, cols):
     return jnp.pad(x, pad)
 
 
+def _pad(x, rows, cols):
+    return mp.map_limbs(lambda l: _pad_to(l, rows, cols), x)
+
+
 # --------------------------------------------------------------------------
 # 2-D backend dispatch
 # --------------------------------------------------------------------------
 
 
-def _execute_pallas(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
-    from repro.kernels.ddgemm import ddgemm_kernel_call
-
+def _execute_pallas(plan: GemmPlan, a, b):
     from .plan import _clamp_blocks
 
     m, k = a.shape
@@ -58,18 +64,30 @@ def _execute_pallas(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
     # device a row panel smaller than the global problem the plan saw
     blk = _clamp_blocks(m, k, n, plan.blocks)
     bm, bn, bk = blk["bm"], blk["bn"], blk["bk"]
-    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
-    a_hi, a_lo = _pad_to(a.hi, mp, kp), _pad_to(a.lo, mp, kp)
-    b_hi, b_lo = _pad_to(b.hi, kp, np_), _pad_to(b.lo, kp, np_)
-    o_hi, o_lo = ddgemm_kernel_call(
-        a_hi, a_lo, b_hi, b_lo, bm=bm, bn=bn, bk=bk, interpret=plan.interpret)
-    return dd.DD(o_hi[:m, :n], o_lo[:m, :n])
+    mpad, npad, kpad = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    a_p, b_p = _pad(a, mpad, kpad), _pad(b, kpad, npad)
+    if plan.precision == "qd":
+        from repro.kernels.qdgemm import qdgemm_kernel_call
+
+        out = qdgemm_kernel_call(*mp.limbs(a_p), *mp.limbs(b_p),
+                                 bm=bm, bn=bn, bk=bk,
+                                 interpret=plan.interpret)
+    else:
+        from repro.kernels.ddgemm import ddgemm_kernel_call
+
+        out = ddgemm_kernel_call(*mp.limbs(a_p), *mp.limbs(b_p),
+                                 bm=bm, bn=bn, bk=bk,
+                                 interpret=plan.interpret)
+    return mp.from_limbs([o[:m, :n] for o in out])
 
 
-def _execute_2d(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
+def _execute_2d(plan: GemmPlan, a, b):
     if plan.backend == "pallas":
         return _execute_pallas(plan, a, b)
     if plan.backend == "ozaki":
+        if plan.precision != "dd":
+            raise ValueError("ozaki backend has no qd tier (make_plan "
+                             "should have rerouted or rejected this plan)")
         from repro.core.ozaki import ozaki_gemm
 
         kw = {}
@@ -85,10 +103,18 @@ def _execute_2d(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
             kw["full"] = plan.full
         return ozaki_gemm(a, b, **kw)
     if plan.backend == "xla":
+        if plan.precision == "qd":
+            from repro.kernels.ops import matmul_qd_xla
+
+            return matmul_qd_xla(a, b, chunk=plan.bk)
         from repro.kernels.ops import matmul_dd_xla
 
         return matmul_dd_xla(a, b, chunk=plan.bk)
     if plan.backend == "ref":
+        if plan.precision == "qd":
+            from repro.kernels.ref import qdgemm_ref
+
+            return qdgemm_ref(a, b)
         from repro.kernels.ref import ddgemm_ref
 
         return ddgemm_ref(a, b)
@@ -100,28 +126,46 @@ def _execute_2d(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
 # --------------------------------------------------------------------------
 
 
-def _execute_batched(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
-    a_batch = a.hi.shape[:-2]
-    b_batch = b.hi.shape[:-2]
+def _execute_batched(plan: GemmPlan, a, b):
+    a_batch = a.shape[:-2]
+    b_batch = b.shape[:-2]
     batch = jnp.broadcast_shapes(a_batch, b_batch)
     nb = math.prod(batch)
 
-    def flat(x: dd.DD, had_batch) -> dd.DD:
+    def flat(x, had_batch):
         if not had_batch:
             return x
-        tgt = batch + x.hi.shape[-2:]
-        hi = jnp.broadcast_to(x.hi, tgt).reshape((nb,) + x.hi.shape[-2:])
-        lo = jnp.broadcast_to(x.lo, tgt).reshape((nb,) + x.lo.shape[-2:])
-        return dd.DD(hi, lo)
+        tgt = batch + x.shape[-2:]
+        return mp.map_limbs(
+            lambda l: jnp.broadcast_to(l, tgt).reshape((nb,) + l.shape[-2:]),
+            x)
 
     af = flat(a, bool(a_batch))
     bf = flat(b, bool(b_batch))
+    # DD/QD are NamedTuple pytrees: in_axes=0 maps every limb plane
     fn = jax.vmap(lambda x, y: _execute_2d(plan, x, y),
                   in_axes=(0 if a_batch else None, 0 if b_batch else None))
     out = fn(af, bf)
-    m, n = out.hi.shape[-2:]
-    return dd.DD(out.hi.reshape(batch + (m, n)),
-                 out.lo.reshape(batch + (m, n)))
+    m, n = out.shape[-2:]
+    return mp.map_limbs(lambda l: l.reshape(batch + (m, n)), out)
+
+
+# jit wrappers keyed on the (frozen, hashable) plan: without these, every
+# eager call re-traces the backend's scan/vmap/pallas graph — at the qd
+# tier that retrace is thousands of ops and dominates wall time (observed
+# in the SDP inner loop).  The mesh field is excluded from plan
+# equality/hash, so only the mesh-free paths go through here; sharded
+# execution compiles inside shard_map as before.
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _execute_2d_jit(a, b, *, plan: GemmPlan):
+    return _execute_2d(plan, a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _execute_batched_jit(a, b, *, plan: GemmPlan):
+    return _execute_batched(plan, a, b)
 
 
 # --------------------------------------------------------------------------
@@ -129,34 +173,35 @@ def _execute_batched(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
 # --------------------------------------------------------------------------
 
 
-def _execute_sharded(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
+def _execute_sharded(plan: GemmPlan, a, b):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     mesh, axis = plan.mesh, plan.shard_axis
     nshards = mesh.shape[axis]
+    nl = mp.nlimbs(a)
     m, k = a.shape
-    _, n = b.shape
-    mp = _round_up(m, nshards)
-    a_hi, a_lo = _pad_to(a.hi, mp, k), _pad_to(a.lo, mp, k)
+    mpad = _round_up(m, nshards)
+    a_p = mp.map_limbs(lambda l: _pad_to(l, mpad, k), a)
 
-    def local(ah, al, bh, bl):
-        out = _execute_2d(plan, dd.DD(ah, al), dd.DD(bh, bl))
-        return out.hi, out.lo
+    def local(*limbs):
+        out = _execute_2d(plan, mp.from_limbs(limbs[:nl]),
+                          mp.from_limbs(limbs[nl:]))
+        return tuple(mp.limbs(out))
 
     row = P(axis, None)
     rep = P(None, None)
-    o_hi, o_lo = shard_map(
+    out = shard_map(
         local, mesh=mesh,
-        in_specs=(row, row, rep, rep),
+        in_specs=(row,) * nl + (rep,) * nl,
         # the output stays row-sharded: each device drains its own C' panel,
         # no all-gather — consumers slice or keep computing shard-local
-        out_specs=(row, row),
+        out_specs=(row,) * nl,
         check_rep=False,
-    )(a_hi, a_lo, b.hi, b.lo)
-    if mp == m:
-        return dd.DD(o_hi, o_lo)  # keeps the row-sharded layout
-    return dd.DD(o_hi[:m], o_lo[:m])
+    )(*mp.limbs(a_p), *mp.limbs(b))
+    if mpad == m:
+        return mp.from_limbs(out)  # keeps the row-sharded layout
+    return mp.from_limbs([l[:m] for l in out])
 
 
 # --------------------------------------------------------------------------
@@ -164,11 +209,20 @@ def _execute_sharded(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
 # --------------------------------------------------------------------------
 
 
-def execute(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
+def execute(plan: GemmPlan, a, b):
     """Run C = A @ B under a plan.  A: (..., m, k), B: (..., k, n)."""
-    if a.hi.shape[-1] != b.hi.shape[-2]:
+    prec = mp.precision_of(a)
+    if mp.precision_of(b) != prec:
+        raise TypeError(f"operand tiers differ: {mp.precision_of(a)} vs "
+                        f"{mp.precision_of(b)}")
+    if prec != plan.precision:
+        raise ValueError(
+            f"plan is for precision={plan.precision!r} but operands are "
+            f"{prec!r}; rebuild with make_plan(..., precision={prec!r}) "
+            f"(engine.matmul infers this from the operand type)")
+    if a.shape[-1] != b.shape[-2]:
         raise ValueError(f"inner dims mismatch: {a.shape} x {b.shape}")
-    batched = a.hi.ndim > 2 or b.hi.ndim > 2
+    batched = len(a.shape) > 2 or len(b.shape) > 2
     if batched:
         if plan.mesh is not None:
             raise NotImplementedError("batched + sharded GEMM in one call")
@@ -176,20 +230,21 @@ def execute(plan: GemmPlan, a: dd.DD, b: dd.DD) -> dd.DD:
             raise ValueError(
                 "plan was made for 2-D operands but inputs have batch dims; "
                 "rebuild with batch_shape= (engine.matmul does this)")
-        return _execute_batched(plan, a, b)
+        return _execute_batched_jit(a, b, plan=plan)
     if plan.mesh is not None and plan.shard_axis is not None:
         return _execute_sharded(plan, a, b)
-    return _execute_2d(plan, a, b)
+    return _execute_2d_jit(a, b, plan=plan)
 
 
-def matmul(a: dd.DD, b: dd.DD, *, plan: Optional[GemmPlan] = None,
-           **overrides) -> dd.DD:
+def matmul(a, b, *, plan: Optional[GemmPlan] = None, **overrides):
     """Plan-and-execute convenience: the repo-wide GEMM entry point.
 
-    ``overrides`` are forwarded to ``make_plan`` (backend=, bm/bn/bk=,
-    mesh=, shard_axis=, ...); pass a prebuilt ``plan`` to skip planning.
-    The two are exclusive — a plan already fixes every decision, so
-    overrides alongside it would be silently dead.
+    The precision tier is inferred from the operand type (``dd.DD`` ->
+    ``"dd"``, ``qd.QD`` -> ``"qd"``) unless overridden.  ``overrides`` are
+    forwarded to ``make_plan`` (backend=, bm/bn/bk=, mesh=, shard_axis=,
+    ...); pass a prebuilt ``plan`` to skip planning.  The two are exclusive
+    — a plan already fixes every decision, so overrides alongside it would
+    be silently dead.
     """
     if plan is not None and overrides:
         raise ValueError(
@@ -197,11 +252,12 @@ def matmul(a: dd.DD, b: dd.DD, *, plan: Optional[GemmPlan] = None,
             f"(got overrides {sorted(overrides)} with an explicit plan; "
             f"use plan.with_(...) to modify it)")
     if plan is None:
-        m, k = a.hi.shape[-2:]
-        k2, n = b.hi.shape[-2:]
+        m, k = a.shape[-2:]
+        k2, n = b.shape[-2:]
         if k != k2:
             raise ValueError(f"inner dims mismatch: {a.shape} x {b.shape}")
-        batch_shape = jnp.broadcast_shapes(a.hi.shape[:-2], b.hi.shape[:-2])
-        plan = make_plan(m, k, n, dtype=a.hi.dtype,
+        batch_shape = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+        overrides.setdefault("precision", mp.precision_of(a))
+        plan = make_plan(m, k, n, dtype=a.limbs()[0].dtype,
                          batch_shape=batch_shape, **overrides)
     return execute(plan, a, b)

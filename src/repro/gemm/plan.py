@@ -23,10 +23,14 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+# the arithmetic layer owns the tier -> limb-count map (re-exported below
+# so plan consumers need not import core); also enables x64 on import
+from repro.core.mp import PRECISIONS
+
 from . import cache as plan_cache
 
 __all__ = ["GemmPlan", "make_plan", "resolve_backend", "round_up",
-           "BACKENDS", "DEFAULT_BLOCKS"]
+           "BACKENDS", "PRECISIONS", "DEFAULT_BLOCKS"]
 
 BACKENDS = ("auto", "pallas", "ozaki", "xla", "ref")
 
@@ -52,6 +56,7 @@ class GemmPlan:
     limb_dtype: str                   # 'float64' (dd64) | 'float32' (df32)
     interpret: bool                   # pallas interpret mode (True off-TPU)
     platform: str                     # 'cpu' | 'tpu' | 'gpu'
+    precision: str = "dd"             # precision tier: dd (2 limbs) | qd (4)
     batch: str = "none"               # none | vmap
     batch_shape: Tuple[int, ...] = ()
     shard_axis: Optional[str] = None  # mesh axis for M-dim row sharding
@@ -66,6 +71,10 @@ class GemmPlan:
     @property
     def blocks(self) -> dict:
         return {"bm": self.bm, "bn": self.bn, "bk": self.bk}
+
+    @property
+    def nlimbs(self) -> int:
+        return PRECISIONS[self.precision]
 
     def with_(self, **changes) -> "GemmPlan":
         return dataclasses.replace(self, **changes)
@@ -95,6 +104,7 @@ def _clamp_blocks(m: int, k: int, n: int, blocks: dict) -> dict:
 
 
 def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
+              precision: str = "dd",
               backend: str = "auto", batch_shape: Tuple[int, ...] = (),
               bm: Optional[int] = None, bn: Optional[int] = None,
               bk: Optional[int] = None, interpret: Optional[bool] = None,
@@ -107,11 +117,23 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
               use_cache: bool = True) -> GemmPlan:
     """Plan one GEMM workload: (batch_shape) x (m, k) @ (k, n).
 
-    Consults the tuned-block cache for (shape-bucket, dtype, platform) before
-    falling back to clamped DEFAULT_BLOCKS, so autotuned tiles are reused
-    across calls and across processes.
+    Consults the tuned-block cache for (shape-bucket, dtype, limb count,
+    platform) before falling back to clamped DEFAULT_BLOCKS, so autotuned
+    tiles are reused across calls and across processes — and each precision
+    tier tunes its own tiles (a QD wave moves 2x the limb planes of DD).
     """
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; "
+                         f"one of {sorted(PRECISIONS)}")
     be = resolve_backend(backend)
+    if precision == "qd" and be == "ozaki":
+        if backend == "ozaki":
+            # explicit request: fail loudly — the Ozaki slice count for a
+            # 212-bit target makes the slice-product sweep useless
+            raise ValueError(
+                "backend 'ozaki' has no qd tier (slice count explodes past "
+                "the 212-bit target); use pallas, xla, or ref")
+        be = "xla"  # 'auto'/env default 'ozaki' is a dd-oriented hint
     platform = platform or jax.default_backend()
     dtype = jnp.dtype(dtype)
     if interpret is None:
@@ -122,7 +144,8 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
     source = "heuristic"
     blocks = dict(DEFAULT_BLOCKS)
     if use_cache and be in ("pallas", "xla") and (bm, bn, bk) == (None,) * 3:
-        key = plan_cache.cache_key(platform, dtype.name, m, k, n, be)
+        key = plan_cache.cache_key(platform, dtype.name, m, k, n, be,
+                                   nlimbs=PRECISIONS[precision])
         tuned = plan_cache.default_cache().get(key)
         # adopt only well-formed entries: the cache is a hint, and a bad
         # persistent value (hand-edit, corruption) must degrade to the
@@ -149,7 +172,8 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
 
     return GemmPlan(
         backend=be, limb_dtype=dtype.name, interpret=bool(interpret),
-        platform=platform, batch="vmap" if batch_shape else "none",
+        platform=platform, precision=precision,
+        batch="vmap" if batch_shape else "none",
         batch_shape=tuple(batch_shape), shard_axis=shard_axis, mesh=mesh,
         slice_dtype=jnp.dtype(slice_dtype).name if slice_dtype else None,
         acc_dtype=jnp.dtype(acc_dtype).name if acc_dtype else None,

@@ -14,11 +14,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import dd
+from repro.core import dd, qd
 from repro.gemm.plan import round_up as _round_up
 from .ddgemm import DEFAULT_BLOCKS  # noqa: F401  (re-export for tuners)
 
-__all__ = ["ddgemm", "matmul_dd_xla"]
+__all__ = ["ddgemm", "matmul_dd_xla", "matmul_qd_xla"]
 
 
 def _pad_to(x, rows, cols):
@@ -69,5 +69,38 @@ def matmul_dd_xla(a: dd.DD, b: dd.DD, *, chunk: int = 16) -> dd.DD:
         return acc, None
 
     init = dd.zeros((m, n), dtype=a.hi.dtype)
+    acc, _ = jax.lax.scan(body, init, jnp.arange(nchunks))
+    return acc
+
+
+def matmul_qd_xla(a: qd.QD, b: qd.QD, *, chunk: int = 16) -> qd.QD:
+    """Blocked XLA (non-Pallas) QD matmul — the quad-limb 'host fallback'.
+
+    The same K-streaming structure as ``matmul_dd_xla`` but every chunk's
+    (m, chunk, n) partial products and the running accumulator are 4-limb
+    expansions built from ``core.qd``'s exact-product + renormalize FMA.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    kp = _round_up(k, chunk)
+    a = qd.QD(*[_pad_to(l, m, kp) for l in a.limbs()])
+    b = qd.QD(*[_pad_to(l, kp, n) for l in b.limbs()])
+    nchunks = kp // chunk
+
+    def body(acc, idx):
+        a_blk = qd.QD(*[
+            jax.lax.dynamic_slice_in_dim(l, idx * chunk, chunk, 1)
+            for l in a.limbs()])
+        b_blk = qd.QD(*[
+            jax.lax.dynamic_slice_in_dim(l, idx * chunk, chunk, 0)
+            for l in b.limbs()])
+        prods = qd.mul(
+            qd.QD(*[l[:, :, None] for l in a_blk.limbs()]),
+            qd.QD(*[l[None, :, :] for l in b_blk.limbs()]),
+        )
+        part = qd.sum_(prods, axis=1)
+        return qd.add(acc, part), None
+
+    init = qd.zeros((m, n), dtype=a.x0.dtype)
     acc, _ = jax.lax.scan(body, init, jnp.arange(nchunks))
     return acc

@@ -1,0 +1,41 @@
+"""Accuracy regression gate: the precision ladder must hold its bit budget.
+
+Pins each engine tier's observed relative error on the exact-rational
+Hilbert GEMM (core/accuracy.py — the same computation bench_accuracy emits
+to BENCH_ACCURACY.json): dd must stay within 2^-100, qd within 2^-190.
+A regression in the EFT chains, the renormalization sweeps, or the engine's
+pad/dispatch plumbing shows up here as lost bits long before it corrupts an
+end-to-end SDP solve.
+"""
+
+import json
+
+import pytest
+
+from repro.core.accuracy import GATES, write_accuracy_json
+
+
+@pytest.fixture(scope="module")
+def accuracy_doc(tmp_path_factory):
+    path = tmp_path_factory.mktemp("accuracy") / "BENCH_ACCURACY.json"
+    return write_accuracy_json(str(path), n=16), path
+
+
+def test_dd_tier_holds_2_pow_minus_100(accuracy_doc):
+    doc, _ = accuracy_doc
+    assert doc["tiers"]["dd"]["rel_err"] <= 2.0 ** -100
+
+
+def test_qd_tier_holds_2_pow_minus_190(accuracy_doc):
+    doc, _ = accuracy_doc
+    assert doc["tiers"]["qd"]["rel_err"] <= 2.0 ** -190
+
+
+def test_artifact_schema_round_trips(accuracy_doc):
+    doc, path = accuracy_doc
+    on_disk = json.loads(path.read_text())
+    assert on_disk["schema"] == "repro-accuracy/v1"
+    assert set(on_disk["tiers"]) == set(GATES)
+    for tier, row in on_disk["tiers"].items():
+        assert row["passes"] is True, (tier, row)
+        assert row["gate"] == GATES[tier]

@@ -1,0 +1,142 @@
+"""Cross-backend conformance matrix for the precision-generic GEMM engine.
+
+One parametrized sweep over (backend x precision x shape x epilogue)
+against the per-tier ``ref`` oracle (kernels/ref.py), with per-tier ulp
+bounds.  Shapes include non-square and odd-K cases, so padding/clamping
+in the engine is exercised at both limb counts; the alpha/beta cells run
+the full Rgemm epilogue with non-representable tier scalars (1/3, -1/7).
+
+This is the test CI's ``conformance`` job runs on CPU interpret mode —
+every cell of the support matrix must agree with its oracle before a
+backend/tier combination is considered live.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import gemm
+from repro.core import mp
+from repro.core.blas import rgemm
+from repro.kernels.ref import ddgemm_ref, qdgemm_ref
+
+# per-tier unit roundoff of one engine FMA (dd: two_prod slack dominates;
+# qd: the O(eps^4) renormalization truncation)
+ULP = {"dd": 2.0 ** -104, "qd": 2.0 ** -205}
+REF = {"dd": ddgemm_ref, "qd": qdgemm_ref}
+
+# the support matrix: ozaki has no qd tier (rejected below, separately)
+CELLS = [(be, "dd") for be in ("pallas", "ozaki", "xla", "ref")] + \
+        [(be, "qd") for be in ("pallas", "xla", "ref")]
+
+# square / non-square / odd-K (prime) so every backend pads and clamps
+SHAPES = [(16, 16, 16), (13, 7, 9), (8, 33, 12)]
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path):
+    cache = gemm.PlanCache(str(tmp_path / "plans.json"))
+    gemm.set_default_cache(cache)
+    yield cache
+    gemm.set_default_cache(None)
+
+
+def _rand(precision, shape, seed):
+    """Random multi-limb operand with signal in every limb."""
+    rng = np.random.default_rng(seed)
+    out = mp.from_float(jnp.asarray(rng.standard_normal(shape)), precision)
+    for scale in (2.0 ** -53, 2.0 ** -106, 2.0 ** -159)[: mp.nlimbs(out) - 1]:
+        extra = mp.from_float(
+            jnp.asarray(rng.standard_normal(shape) * scale), precision)
+        out = mp.add(out, extra)
+    return out
+
+
+def _rel_err(got, want) -> float:
+    """Max |got - want| / max|want|, measured in the operands' tier."""
+    diff = np.abs(np.asarray(mp.to_float(mp.sub(got, want)), np.float64))
+    scale = max(1.0, float(np.abs(np.asarray(mp.to_float(want))).max()))
+    return float(diff.max()) / scale
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("backend,precision", CELLS)
+def test_product_matches_tier_oracle(backend, precision, m, k, n, tmp_cache):
+    a = _rand(precision, (m, k), seed=m * 31 + k)
+    b = _rand(precision, (k, n), seed=n * 17 + k)
+    want = REF[precision](a, b)
+    got = gemm.matmul(a, b, backend=backend)
+    assert mp.precision_of(got) == precision
+    assert _rel_err(got, want) < 16 * k * ULP[precision]
+
+
+@pytest.mark.parametrize("backend,precision", CELLS)
+def test_alpha_beta_epilogue_in_tier(backend, precision, tmp_cache):
+    m, k, n = 9, 11, 6  # odd everything: padding + epilogue broadcast
+    a = _rand(precision, (m, k), seed=1)
+    b = _rand(precision, (k, n), seed=2)
+    c = _rand(precision, (m, n), seed=3)
+    one = mp.from_float(jnp.asarray(1.0), precision)
+    third = mp.div(one, mp.from_float(jnp.asarray(3.0), precision))
+    m_seventh = mp.div(mp.neg(one), mp.from_float(jnp.asarray(7.0), precision))
+    got = rgemm("n", "n", third, a, b, m_seventh, c, backend=backend)
+    prod = REF[precision](a, b)
+    want = mp.add(mp.mul(mp.broadcast_to(third, prod.shape), prod),
+                  mp.mul(mp.broadcast_to(m_seventh, c.shape), c))
+    assert _rel_err(got, want) < 16 * k * ULP[precision]
+
+
+@pytest.mark.parametrize("backend,precision", CELLS)
+def test_batched_matches_looped_oracle(backend, precision, tmp_cache):
+    a = _rand(precision, (3, 7, 5), seed=4)
+    b = _rand(precision, (5, 8), seed=5)
+    got = gemm.matmul(a, b, backend=backend)
+    assert got.shape == (3, 7, 8)
+    for i in range(3):
+        want = REF[precision](a[i], b)
+        assert _rel_err(got[i], want) < 16 * 5 * ULP[precision]
+
+
+def test_transpose_flags_compose_with_tiers(tmp_cache):
+    for precision in ("dd", "qd"):
+        a = _rand(precision, (7, 10), seed=6)   # op(A) = A^T: (10, 7)
+        b = _rand(precision, (7, 4), seed=7)
+        got = rgemm("t", "n", 1.0, a, b, 0.0, backend="xla")
+        want = REF[precision](
+            mp.map_limbs(lambda l: l.T, a), b)
+        assert _rel_err(got, want) < 16 * 7 * ULP[precision]
+
+
+def test_ozaki_has_no_qd_tier(tmp_cache):
+    a = _rand("qd", (8, 8), seed=8)
+    with pytest.raises(ValueError, match="ozaki"):
+        gemm.matmul(a, a, backend="ozaki")
+
+
+def test_mixed_tier_operands_rejected(tmp_cache):
+    a = _rand("dd", (8, 8), seed=9)
+    b = _rand("qd", (8, 8), seed=10)
+    with pytest.raises(TypeError, match="tier"):
+        gemm.matmul(a, b, backend="xla")
+
+
+def test_plan_precision_must_match_operands(tmp_cache):
+    plan = gemm.make_plan(8, 8, 8, backend="xla", precision="qd")
+    a = _rand("dd", (8, 8), seed=11)
+    with pytest.raises(ValueError, match="precision"):
+        gemm.execute(plan, a, a)
+
+
+def test_qd_tiles_tune_independently(tmp_cache):
+    # same bucket, different limb count -> different cache rows
+    kd = gemm.cache_key("cpu", "float64", 100, 100, 100, "pallas", nlimbs=2)
+    kq = gemm.cache_key("cpu", "float64", 100, 100, 100, "pallas", nlimbs=4)
+    assert kd != kq
+    tmp_cache.put(kd, {"bm": 32, "bn": 64, "bk": 8})
+    tmp_cache.put(kq, {"bm": 16, "bn": 32, "bk": 8})
+    pd = gemm.make_plan(100, 100, 100, backend="pallas", platform="cpu")
+    pq = gemm.make_plan(100, 100, 100, backend="pallas", platform="cpu",
+                        precision="qd")
+    assert (pd.bm, pd.bn, pd.bk) == (32, 64, 8) and pd.source == "tuned"
+    assert (pq.bm, pq.bn, pq.bk) == (16, 32, 8) and pq.source == "tuned"
+    assert pq.nlimbs == 4

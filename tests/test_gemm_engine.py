@@ -282,6 +282,34 @@ class TestAutotuneCache:
                               platform="cpu")
         assert plan.source == "heuristic" and plan.bm > 0
 
+    @pytest.mark.parametrize("garbage", [
+        b'{"cpu/float64/128x128x128/pallas": {"bm": 32',  # truncated write
+        b"\x00\x80 not json at all \xff",                 # binary noise
+        b"[1, 2, 3]",                                     # valid JSON, wrong shape
+    ])
+    def test_corrupt_cache_file_warns_and_retunes(self, tmp_path, garbage):
+        # a torn/garbled on-disk cache must cost a warning and a heuristic
+        # plan, never an exception in every GEMM that consults the bucket
+        path = tmp_path / "corrupt.json"
+        path.write_bytes(garbage)
+        cache = gemm.PlanCache(str(path))
+        gemm.set_default_cache(cache)
+        try:
+            with pytest.warns(RuntimeWarning, match="cache"):
+                plan = gemm.make_plan(100, 100, 100, backend="pallas",
+                                      platform="cpu")
+            assert plan.source == "heuristic" and plan.bm > 0
+            # the poisoned file is recoverable: a put() rewrites it cleanly
+            key = gemm.cache_key("cpu", "float64", 100, 100, 100, "pallas")
+            cache.put(key, {"bm": 32, "bn": 64, "bk": 8})
+            assert gemm.PlanCache(str(path)).get(key) == \
+                {"bm": 32, "bn": 64, "bk": 8}
+            replan = gemm.make_plan(100, 100, 100, backend="pallas",
+                                    platform="cpu")
+            assert replan.source == "tuned" and replan.bm == 32
+        finally:
+            gemm.set_default_cache(None)
+
     def test_autotune_persists_winner(self, tmp_cache, monkeypatch):
         # tuned under backend="auto": the entry must land under the RESOLVED
         # backend key, where make_plan will actually look it up

@@ -86,3 +86,80 @@ def test_to_dd_roundtrip():
     q = qd.from_float(jnp.float64(3.5))
     d = qd.to_dd(q)
     assert float(dd.to_float(d)) == 3.5
+
+
+# --------------------------------------------------------------------------
+# property tests for the qd tier's engine-facing contract (ISSUE-2):
+# associativity error bounds, renorm idempotence, dd round-trips, div/sqrt
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite, finite, finite)
+def test_add_associativity_error_bound(a, b, c):
+    # floating add is not associative; QD add must keep BOTH parenthesizations
+    # within the format's eps of the exact sum (so accumulation order inside
+    # the engine's tree reductions cannot cost observable bits)
+    qa, qb, qc = (qd.from_float(jnp.float64(v)) for v in (a, b, c))
+    want = Fraction(a) + Fraction(b) + Fraction(c)
+    left = _qd_frac(qd.add(qd.add(qa, qb), qc))
+    right = _qd_frac(qd.add(qa, qd.add(qb, qc)))
+    assert _rel(left, want) <= QD_TARGET
+    assert _rel(right, want) <= QD_TARGET
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite, finite, finite, finite)
+def test_renorm_idempotence(a, b, c, e):
+    # renormalizing an already-renormalized expansion is the identity,
+    # limb for limb (the canonical-form fixed point the kernels rely on)
+    terms = [jnp.float64(a), jnp.float64(b * 1e-16),
+             jnp.float64(c * 1e-32), jnp.float64(e * 1e-48)]
+    once = qd.renorm_list(terms, k=4, sweeps=3)
+    twice = qd.renorm_list(once, k=4, sweeps=3)
+    for l1, l2 in zip(once, twice):
+        assert float(l1) == float(l2) or (
+            np.isnan(float(l1)) and np.isnan(float(l2)))
+
+
+@settings(max_examples=100, deadline=None)
+@given(finite, finite)
+def test_from_dd_to_dd_roundtrip_exact(a, b):
+    # lifting a canonical DD into QD and dropping back must be EXACT:
+    # the two extra limbs are zeros, to_dd re-distills the same pair
+    d = dd.add(dd.from_float(jnp.float64(a)),
+               dd.from_float(jnp.float64(b * 1e-17)))
+    rt = qd.to_dd(qd.from_dd(d))
+    assert float(rt.hi) == float(d.hi)
+    assert float(rt.lo) == float(d.lo)
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite, finite)
+def test_div_beats_binary128(a, b):
+    qa = qd.from_float(jnp.float64(a))
+    qb = qd.from_float(jnp.float64(b))
+    if b == 0:
+        return
+    got = _qd_frac(qd.div(qa, qb))
+    assert _rel(got, Fraction(a) / Fraction(b)) <= QD_TARGET
+
+
+@settings(max_examples=50, deadline=None)
+@given(finite)
+def test_sqrt_squares_back(a):
+    a = abs(a)
+    qa = qd.from_float(jnp.float64(a))
+    s = qd.sqrt(qa)
+    # sqrt itself is irrational: verify s*s ~ a to the format's precision
+    assert _rel(_qd_frac(qd.mul(s, s)), Fraction(a)) <= 2.0 ** -140
+
+
+def test_where_and_zeros_shapes():
+    z = qd.zeros((3, 2))
+    assert z.shape == (3, 2) and all(
+        float(l.sum()) == 0.0 for l in z.limbs())
+    picked = qd.where(jnp.asarray([[True], [False], [True]]),
+                      qd.from_float(jnp.ones((3, 2))), z)
+    assert np.asarray(qd.to_float(picked)).tolist() == [
+        [1.0, 1.0], [0.0, 0.0], [1.0, 1.0]]
