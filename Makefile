@@ -2,7 +2,8 @@
 
 PY ?= python
 
-.PHONY: tier1 test-fast conformance bench bench-gemm bench-accuracy tune
+.PHONY: tier1 test-fast conformance bench bench-gemm bench-smoke \
+	bench-accuracy tune ozaki-tune
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -22,6 +23,11 @@ bench:
 bench-gemm:
 	PYTHONPATH=src $(PY) -m benchmarks.run bench_gemm
 
+# every backend x tier at small n, conformance-checked against the ref
+# oracle — exits nonzero on a conformance failure (CI's bench-smoke job)
+bench-smoke:
+	BENCH_SMOKE=1 PYTHONPATH=src $(PY) -m benchmarks.run bench_gemm
+
 # emits BENCH_ACCURACY.json (per-tier observed relative error on the
 # exact-rational Hilbert case; the accuracy regression artifact)
 bench-accuracy:
@@ -32,3 +38,11 @@ tune:
 	PYTHONPATH=src $(PY) -c "from repro.gemm import autotune; \
 	[autotune(n, n, n) for n in (64, 128, 256)]; \
 	[autotune(n, n, n, precision='qd') for n in (64, 128)]"
+
+# sweep block shapes x n_slices for the fused Ozaki-slice kernel and
+# persist the winners (dd tier at common buckets, qd at the small ones)
+ozaki-tune:
+	PYTHONPATH=src $(PY) -c "from repro.gemm import autotune; \
+	[autotune(n, n, n, backend='ozaki-pallas') for n in (32, 64, 128)]; \
+	[autotune(n, n, n, backend='ozaki-pallas', precision='qd') \
+	 for n in (32, 64)]"

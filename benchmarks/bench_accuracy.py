@@ -28,6 +28,11 @@ def run():
         emit(f"accuracy_gate/hilbert/{tier}", 0.0,
              f"rel_err={row['rel_err']:.3e};gate={row['gate']:.3e};"
              f"passes={row['passes']}")
+    for be, tiers in doc["backends"].items():
+        for tier, row in tiers.items():
+            emit(f"accuracy_gate/hilbert/{be}/{tier}", 0.0,
+                 f"rel_err={row['rel_err']:.3e};gate={row['gate']:.3e};"
+                 f"passes={row['passes']}")
     print("# wrote BENCH_ACCURACY.json", flush=True)
     for n in (64, 128, 256):
         a, b = rand_dd((n, n), 11), rand_dd((n, n), 12)

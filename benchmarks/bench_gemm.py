@@ -1,52 +1,111 @@
 """Paper Fig. 2/5: binary128-class GEMM throughput vs matrix size.
 
-CPU-measured GFlops for the three backends (ozaki / xla / pallas-interpret),
-plus the f64 'double' control and the TPU-v5e roofline projection for the
-Ozaki-on-MXU path (the deployment target; this container has no TPU).
+CPU-measured GFlops for the backends (ozaki / xla / the interpret-mode
+Pallas kernels), plus the f64 'double' control and the TPU-v5e roofline
+projection for the fused Ozaki-slice kernel (the deployment target; this
+container has no TPU).
 
 GFlops counts the BINARY128-CLASS operations (2*m*n*k per Eq. 4 of the
 paper) — the same accounting the paper uses for its FPGA MACs.
+
+Smoke mode (``BENCH_SMOKE=1``, CI's bench-smoke job): tiny problems, EVERY
+backend x tier cell, and each cell's result is checked against the ref
+oracle — a wrong answer fails the benchmark run, so the perf artifact can
+never ship numbers from a broken kernel.
 """
 
 from __future__ import annotations
 
-import math
+import os
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import dd, ozaki
+from repro.core import dd, mp, ozaki
+from repro.core.accuracy import max_rel_err
 from repro.core.gemm import matmul
+from repro.kernels.ref import ddgemm_ref, qdgemm_ref
 from .common import block, dump_json, emit, rand_dd, time_fn
 
+# bf16-sliced conformance floor is coarser than the f64-limb backends'
+_SMOKE_TOL = {"dd": 2.0 ** -88, "qd": 2.0 ** -185}
 
-def projected_tpu_gflops(n: int) -> float:
-    """Ozaki-on-MXU effective binary128 GEMM rate on one v5e chip."""
-    beta = ozaki.slice_bits(n, jnp.float32, jnp.bfloat16)
-    s = ozaki.slice_count(107, beta)
+
+def projected_tpu_gflops(n: int, bk: int = 128) -> float:
+    """Fused Ozaki-on-MXU effective binary128 GEMM rate on one v5e chip.
+
+    Models the ozaki-pallas kernel: slices are taken per K-slab (depth
+    ``bk``), so the slice count follows the slab fixpoint, not the whole-K
+    one — the reason the fused kernel's slice budget stays flat in n.
+    """
+    beta, s = ozaki.slice_params(min(n, bk), jnp.float32, jnp.bfloat16)
     n_products = s * (s + 1) // 2  # triangular truncation
     return 197e12 / n_products / 1e9
 
 
+def _rand_tier(precision, shape, seed):
+    rng = np.random.default_rng(seed)
+    return mp.from_float(jnp.asarray(rng.random(shape) - 0.5), precision)
+
+
+def _smoke():
+    """Every backend x tier at small n, conformance-checked vs the oracle."""
+    n = 24
+    flops = 2.0 * n ** 3
+    ref = {"dd": ddgemm_ref, "qd": qdgemm_ref}
+    cells = [(be, "dd") for be in ("ozaki", "ozaki-pallas", "xla",
+                                   "pallas", "ref")] + \
+            [(be, "qd") for be in ("ozaki-pallas", "xla", "pallas", "ref")]
+    failures = []
+    for backend, precision in cells:
+        a = _rand_tier(precision, (n, n), 1)
+        b = _rand_tier(precision, (n, n), 2)
+        want = ref[precision](a, b)
+        # the conformance call doubles as the timing warmup: interpret-mode
+        # cells are slow enough that a third execution per cell matters
+        got = block(matmul(a, b, backend=backend))
+        err = max_rel_err(got, want)
+        ok = err < n * _SMOKE_TOL[precision]
+        t = time_fn(lambda: block(matmul(a, b, backend=backend)),
+                    warmup=0, iters=1)
+        emit(f"gemm_smoke/{backend}/{precision}/n={n}", t * 1e6,
+             f"gflops={flops / t / 1e9:.4f};rel_err={err:.3e};conforms={ok}")
+        if not ok:
+            failures.append((backend, precision, err))
+    dump_json("BENCH_GEMM.json", prefix="gemm_")
+    if failures:
+        raise SystemExit(f"smoke conformance failures: {failures}")
+
+
 def run():
+    if os.environ.get("BENCH_SMOKE"):
+        _smoke()
+        return
     for n in (64, 128, 256, 384):
         a, b = rand_dd((n, n), 1), rand_dd((n, n), 2)
         flops = 2.0 * n**3
         for backend in ("ozaki", "xla"):
-            t = time_fn(lambda: block(matmul(a, b, backend=backend)))
+            # median of 5: containerized CPU throttling swings single
+            # wall-clock samples by 2-3x
+            t = time_fn(lambda: block(matmul(a, b, backend=backend)),
+                        iters=5)
             emit(f"gemm_fig2/{backend}/n={n}", t * 1e6,
                  f"gflops={flops / t / 1e9:.3f}")
         emit(f"gemm_fig2/tpu_projected/n={n}", 0.0,
              f"gflops={projected_tpu_gflops(n):.1f}")
-    # pallas interpret is slow; one size to document correctness-mode cost
+    # pallas interpret is slow; one size each to document correctness-mode
+    # cost for the systolic DD kernel and the fused Ozaki-slice kernel
     n = 128
     a, b = rand_dd((n, n), 3), rand_dd((n, n), 4)
     t = time_fn(lambda: block(matmul(a, b, backend="pallas", bm=64, bn=64, bk=16)),
                 iters=1)
     emit(f"gemm_fig2/pallas_interpret/n={n}", t * 1e6,
          f"gflops={2.0 * n**3 / t / 1e9:.4f}")
+    t = time_fn(lambda: block(matmul(a, b, backend="ozaki-pallas",
+                                     bm=64, bn=64, bk=32)), iters=1)
+    emit(f"gemm_fig2/ozaki_pallas_interpret/n={n}", t * 1e6,
+         f"gflops={2.0 * n**3 / t / 1e9:.4f}")
     # f64 'double' control (what the paper's CPU baseline does per core)
-    import numpy as np
-
     an, bn = np.asarray(dd.to_float(a)), np.asarray(dd.to_float(b))
     t = time_fn(lambda: an @ bn)
     emit(f"gemm_fig2/f64_numpy/n={n}", t * 1e6,

@@ -21,6 +21,7 @@ thresholds in tier 1.
 
 from __future__ import annotations
 
+import functools
 import json
 import time
 from fractions import Fraction
@@ -30,17 +31,38 @@ import numpy as np
 
 from . import mp
 
-__all__ = ["GATES", "hilbert_f64", "hilbert_relative_error",
-           "accuracy_report", "write_accuracy_json"]
+__all__ = ["GATES", "GATED_BACKENDS", "hilbert_f64",
+           "hilbert_relative_error", "accuracy_report",
+           "write_accuracy_json", "max_rel_err"]
 
 # per-tier observed-relative-error ceilings (the regression gate)
 GATES = {"dd": 2.0 ** -100, "qd": 2.0 ** -190}
+
+# backends pinned by the gate, with the tiers each one supports: the
+# engine default (xla) plus both Ozaki slicing paths — the whole-K
+# diagonal-grouped XLA recombination and the per-slab fused Pallas kernel
+GATED_BACKENDS = {
+    "xla": ("dd", "qd"),
+    "ozaki": ("dd",),
+    "ozaki-pallas": ("dd", "qd"),
+}
 
 
 def hilbert_f64(n: int) -> np.ndarray:
     """Hilbert matrix H_ij = 1/(i+j+1), rounded once to f64."""
     i = np.arange(n, dtype=np.float64)
     return 1.0 / (i[:, None] + i[None, :] + 1.0)
+
+
+def max_rel_err(got, want) -> float:
+    """Max |got - want| / max(1, max|want|), measured in the values' tier.
+
+    The shared conformance metric: the smoke benchmark, the conformance
+    matrix, and the kernel tests all gate on this one definition.
+    """
+    diff = np.abs(np.asarray(mp.to_float(mp.sub(got, want)), np.float64))
+    scale = max(1.0, float(np.abs(np.asarray(mp.to_float(want))).max()))
+    return float(diff.max()) / scale
 
 
 def hilbert_tier(precision: str, n: int):
@@ -55,6 +77,21 @@ def _frac(limbs_np, i: int, j: int) -> Fraction:
     return sum((Fraction(float(l[i, j])) for l in limbs_np), Fraction(0))
 
 
+@functools.lru_cache(maxsize=8)
+def _hilbert_oracle(precision: str, n: int):
+    """Exact rational H @ H over the tier's representable H entries.
+
+    Depends only on (precision, n) — NOT on the backend under test — and
+    the O(n^3) Fraction arithmetic dominates gate wall time, so it is
+    computed once and shared by every gated backend's cell.
+    """
+    x = hilbert_tier(precision, n)
+    in_limbs = [np.asarray(l, np.float64) for l in mp.limbs(x)]
+    fx = [[_frac(in_limbs, i, j) for j in range(n)] for i in range(n)]
+    return [[sum((fx[i][k] * fx[k][j] for k in range(n)), Fraction(0))
+             for j in range(n)] for i in range(n)]
+
+
 def hilbert_relative_error(precision: str = "dd", n: int = 16,
                            backend: str = "xla") -> float:
     """Max observed relative error of one engine tier on H @ H vs the exact
@@ -63,42 +100,62 @@ def hilbert_relative_error(precision: str = "dd", n: int = 16,
 
     x = hilbert_tier(precision, n)
     got = matmul(x, x, backend=backend)
-    in_limbs = [np.asarray(l, np.float64) for l in mp.limbs(x)]
     out_limbs = [np.asarray(l, np.float64) for l in mp.limbs(got)]
-    fx = [[_frac(in_limbs, i, j) for j in range(n)] for i in range(n)]
+    want = _hilbert_oracle(precision, n)
     worst = 0.0
     for i in range(n):
         for j in range(n):
-            want = sum((fx[i][k] * fx[k][j] for k in range(n)), Fraction(0))
-            rel = abs(float((_frac(out_limbs, i, j) - want) / want))
+            rel = abs(float((_frac(out_limbs, i, j) - want[i][j])
+                            / want[i][j]))
             worst = max(worst, rel)
     return worst
 
 
-def accuracy_report(n: int = 16, backend: str = "xla") -> dict:
+def accuracy_report(n: int = 16, backend: str = "xla",
+                    tiers=None) -> dict:
     """Observed relative error per tier, with its gate and headroom."""
-    tiers = {}
-    for prec, gate in GATES.items():
+    out = {}
+    for prec in (tiers if tiers is not None else GATES):
+        gate = GATES[prec]
         err = hilbert_relative_error(prec, n=n, backend=backend)
-        tiers[prec] = {
+        out[prec] = {
             "rel_err": err,
             "gate": gate,
             "log2_err": float(np.log2(err)) if err > 0 else None,
             "passes": bool(err <= gate),
         }
-    return tiers
+    return out
 
 
 def write_accuracy_json(path: str, n: int = 16, backend: str = "xla") -> dict:
-    """Emit the per-tier accuracy artifact (schema repro-accuracy/v1)."""
+    """Emit the per-tier accuracy artifact (schema repro-accuracy/v2).
+
+    ``tiers`` keeps the primary backend's per-tier rows (the v1 layout);
+    ``backends`` adds one such block per gated backend, so a slicing-path
+    regression is visible in the artifact even when the default engine
+    path still passes.
+    """
     import jax
 
+    backends = {
+        be: accuracy_report(n=n, backend=be, tiers=supported)
+        for be, supported in GATED_BACKENDS.items()
+    }
+    # the legacy per-tier block aliases the primary backend's rows when it
+    # is gated with the full tier set (the common case); a partially-gated
+    # primary (e.g. dd-only ozaki) reports only the tiers it supports
+    tiers = backends[backend] \
+        if set(GATED_BACKENDS.get(backend, ())) == set(GATES) \
+        else accuracy_report(n=n, backend=backend,
+                             tiers=GATED_BACKENDS.get(backend))
     doc = {
-        "schema": "repro-accuracy/v1",
+        "schema": "repro-accuracy/v2",
         "unix_time": time.time(),
         "platform": jax.default_backend(),
-        "case": {"matrix": "hilbert", "n": n, "backend": backend},
-        "tiers": accuracy_report(n=n, backend=backend),
+        "case": {"matrix": "hilbert", "n": n, "backend": backend,
+                 "backends": sorted(GATED_BACKENDS)},
+        "tiers": tiers,
+        "backends": backends,
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)

@@ -1,21 +1,24 @@
 """Rgemm-compatible BLAS layer (paper §III-A, Listing 1).
 
-Mirrors MPLAPACK's ``Rgemm`` split exactly as the paper implements it: the
-accelerator computes only ``C' = A @ B`` (Eq. 2); the host handles transposes
-and the alpha/beta epilogue (Eq. 1), because scalar-matrix multiply and
-matrix add are O(n^2) and "very costly in a GEMM design on an FPGA" — and
-equally pointless to fuse into the TPU kernel.
+Mirrors MPLAPACK's ``Rgemm`` split: the accelerator computes the O(mnk)
+product ``C' = A @ B`` (Eq. 2); this layer handles the transposes, and
+hands the alpha/beta epilogue (Eq. 1) to the engine.  The paper keeps the
+epilogue on the host because scalar-matrix multiply is "very costly in a
+GEMM design on an FPGA"; on the TPU port the engine instead *fuses* it
+into the drain step of epilogue-capable kernels (the ``ozaki-pallas``
+backend applies alpha/beta while the C' tile is still in VMEM) and falls
+back to an identical tier-arithmetic post-step everywhere else.
 
 Matrices are multi-limb struct-of-arrays values — ``dd.DD`` (binary128
 class) or ``qd.QD`` (binary128+ class); the epilogue runs in the operands'
-own tier via ``core.mp``.  ``alpha``/``beta`` may be python floats or
-multi-limb scalars of either tier (promoted to match the product).
+own tier.  ``alpha``/``beta`` may be python floats or multi-limb scalars
+of either tier (promoted to match the product).
 
-The accelerator product routes through the unified execution engine
-(``repro.gemm``): pass a prebuilt ``GemmPlan`` via ``plan=`` to pin every
-dispatch decision, or keyword overrides (``backend=``, ``mesh=``, block
-shapes) that feed the planner; with neither, the engine plans from shape,
-precision, platform, and the tuned-block cache.
+The product routes through the unified execution engine (``repro.gemm``):
+pass a prebuilt ``GemmPlan`` via ``plan=`` to pin every dispatch decision,
+or keyword overrides (``backend=``, ``mesh=``, block shapes) that feed the
+planner; with neither, the engine plans from shape, precision, platform,
+and the tuned-block cache.
 """
 
 from __future__ import annotations
@@ -39,35 +42,21 @@ def identity(n: int, dtype=jnp.float64, precision: str = "dd"):
     return mp.from_float(jnp.eye(n, dtype=dtype), precision)
 
 
-def _as_scalar(x, like):
-    """Coerce a python float / multi-limb scalar to ``like``'s tier."""
-    prec = mp.precision_of(like)
-    try:
-        return mp.promote(x, prec)
-    except TypeError:
-        return mp.from_float(jnp.asarray(x, like.limbs()[0].dtype), prec)
-
-
 def rgemm(transa: str, transb: str, alpha, a, b, beta,
           c=None, *, plan=None, **plan_overrides):
     """C = alpha * op(A) @ op(B) + beta * C   (op per 'n'/'t' flags).
 
     The m/n/k/ld* arguments of the C API are implied by array shapes here;
-    the transpose and epilogue happen on the host side of the split, the
-    O(mnk) product on the engine-planned accelerator path.
+    the transposes happen on the host side of the split, the O(mnk)
+    product AND the epilogue on the engine-planned accelerator path (which
+    fuses alpha/beta into the kernel drain when the backend supports it).
     """
     if transa.lower().startswith("t"):
         a = transpose(a)
     if transb.lower().startswith("t"):
         b = transpose(b)
-    prod = matmul(a, b, plan=plan, **plan_overrides)
-    alpha = _as_scalar(alpha, prod)
-    out = mp.mul(mp.broadcast_to(alpha, prod.shape), prod)
-    if c is not None:
-        beta = _as_scalar(beta, prod)
-        bc = mp.mul(mp.broadcast_to(beta, c.shape), c)
-        out = mp.add(out, bc)
-    return out
+    return matmul(a, b, plan=plan, alpha=alpha, beta=beta, c=c,
+                  **plan_overrides)
 
 
 def rsyrk(uplo: str, trans: str, alpha, a, beta,

@@ -13,9 +13,12 @@ Backends (dd tier ~2^-104-grade accumulation; qd tier ~2^-205):
   pallas — the systolic-tile Pallas kernels (kernels/ddgemm.py,
            kernels/qdgemm.py); the paper's design.  interpret-mode on CPU,
            native on TPU.
-  ozaki  — error-free slicing onto native GEMMs (core/ozaki.py); the
-           beyond-paper MXU path.  Fastest on both CPU (f64 XLA dot) and
-           TPU (bf16 MXU dot).  dd tier only.
+  ozaki  — whole-K error-free slicing onto native GEMMs with
+           diagonal-grouped recombination (core/ozaki.py); the fastest
+           CPU path (f64 XLA dot).  dd tier only.
+  ozaki-pallas — the fused per-K-slab slicing kernel (kernels/ozgemm.py):
+           slice-pair dots on the MXU, recombination in VMEM scratch,
+           fused alpha/beta drain.  dd and qd tiers; the TPU target.
   xla    — blocked jnp multi-limb matmul (kernels/ops.matmul_dd_xla /
            matmul_qd_xla); portable fallback.
   ref    — O(m*k*n)-memory oracles (kernels/ref.py); tests only.

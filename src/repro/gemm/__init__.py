@@ -8,12 +8,16 @@ matmul in the repo funnels through:
     c     = execute(plan, a, b)         # or matmul(a, b, ...) to do both
 
 ``make_plan`` picks the precision tier (dd = 2-limb binary128 class |
-qd = 4-limb binary128+), the backend (pallas | ozaki | xla | ref), block
-shapes (tuned cache > heuristics), limb/slice dtypes per platform, and the
-batch / sharding strategy.  ``autotune`` sweeps block shapes with the
-paper's resource models and persists winners on disk keyed by
-(shape-bucket, dtype, limb count, platform), so each precision tier tunes
-its own tiles.  See DESIGN.md §4 (flow) and §8 (precision ladder).
+qd = 4-limb binary128+), the backend (pallas | ozaki | ozaki-pallas |
+xla | ref), block shapes (tuned cache > heuristics), limb/slice dtypes and
+solved slice parameters per platform, and the batch / sharding strategy.
+``execute``/``matmul`` also carry the optional Rgemm alpha/beta epilogue
+(fused into the ozaki-pallas kernel drain, post-step elsewhere).
+``autotune`` sweeps block shapes — × n_slices for the slicing kernel —
+with the paper's resource models and persists winners on disk keyed by
+(schema, shape-bucket, dtype, limb count, platform), so each precision
+tier tunes its own tiles.  See DESIGN.md §4 (flow), §8 (precision
+ladder), and §9 (MXU-resident Ozaki slicing).
 """
 
 from .plan import BACKENDS, PRECISIONS, GemmPlan, make_plan, resolve_backend

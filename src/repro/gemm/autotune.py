@@ -100,6 +100,27 @@ def _time_once(fn, warmup: int = 1, iters: int = 2) -> float:
     return float(np.median(times))
 
 
+def _expand_slice_candidates(m: int, k: int, n: int, blocks: Sequence[dict],
+                             dtype, precision: str) -> List[dict]:
+    """Cross block candidates with ``n_slices`` for the slicing kernel.
+
+    Per block shape the exactness fixpoint fixes the MINIMUM slice count
+    for the slab depth; the sweep also tries one extra slice (more dots,
+    but finer slices sometimes win on accuracy-irrelevant grounds like
+    concat sizes).  Counts below the minimum would silently lose bits, so
+    they are never candidates.
+    """
+    out = []
+    for blk in blocks:
+        base = make_plan(m, k, n, dtype=dtype, precision=precision,
+                         backend="ozaki-pallas", use_cache=False, **blk)
+        if base.backend != "ozaki-pallas":
+            continue  # slicing infeasible for this problem: plan fell back
+        for ns in (base.n_slices, base.n_slices + 1):
+            out.append(dict(blk, n_slices=ns))
+    return out
+
+
 def autotune(m: int, k: int, n: int, *, dtype=jnp.float64,
              precision: str = "dd", backend: str = "pallas",
              candidates: Optional[Sequence[dict]] = None,
@@ -110,14 +131,22 @@ def autotune(m: int, k: int, n: int, *, dtype=jnp.float64,
     Returns the tuned ``GemmPlan`` for the (m, k, n) problem at the given
     precision tier; subsequent ``make_plan`` calls in the same (shape
     bucket, limb count) pick the entry up from the cache automatically.
+    For ``backend="ozaki-pallas"`` the search space is block shapes x
+    ``n_slices`` (never below the exactness minimum) and the winner's
+    slice count is persisted alongside its blocks.
     """
     dtype = jnp.dtype(dtype)
     nlimbs = PRECISIONS[precision]
     backend = resolve_backend(backend)  # key the cache on the resolved name
     cache = cache or plan_cache.default_cache()
-    candidates = list(candidates) if candidates is not None \
-        else candidate_blocks(m, k, n, limb_bytes=dtype.itemsize,
-                              nlimbs=nlimbs)
+    if candidates is not None:
+        candidates = list(candidates)
+    else:
+        candidates = candidate_blocks(m, k, n, limb_bytes=dtype.itemsize,
+                                      nlimbs=nlimbs)
+        if backend == "ozaki-pallas":
+            candidates = _expand_slice_candidates(m, k, n, candidates,
+                                                  dtype, precision)
     if not candidates:
         raise ValueError(f"no feasible block candidates for {(m, k, n)}")
 
@@ -128,9 +157,11 @@ def autotune(m: int, k: int, n: int, *, dtype=jnp.float64,
     b = mp.from_float(jnp.asarray(rng.random((k, n)) - 0.5, dtype), precision)
 
     best, best_t = None, float("inf")
-    for blk in candidates:
+    for cand in candidates:
+        blk = {x: cand[x] for x in ("bm", "bn", "bk")}
         plan = make_plan(m, k, n, dtype=dtype, precision=precision,
-                         backend=backend, use_cache=False, **blk)
+                         backend=backend, use_cache=False,
+                         n_slices=cand.get("n_slices"), **blk)
         t = _time_once(lambda: engine.execute(plan, a, b), iters=iters)
         if t < best_t:
             best, best_t = plan, t
@@ -138,7 +169,10 @@ def autotune(m: int, k: int, n: int, *, dtype=jnp.float64,
     if persist:
         key = plan_cache.cache_key(best.platform, dtype.name, m, k, n,
                                    backend, nlimbs=nlimbs)
-        cache.put(key, {"bm": best.bm, "bn": best.bn, "bk": best.bk,
-                        "us_per_call": best_t * 1e6,
-                        "bucket": plan_cache.shape_bucket(m, k, n)})
+        entry = {"bm": best.bm, "bn": best.bn, "bk": best.bk,
+                 "us_per_call": best_t * 1e6,
+                 "bucket": plan_cache.shape_bucket(m, k, n)}
+        if best.backend == "ozaki-pallas" and best.n_slices:
+            entry["n_slices"] = int(best.n_slices)
+        cache.put(key, entry)
     return best.with_(source="tuned")

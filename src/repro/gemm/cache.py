@@ -3,9 +3,11 @@
 The paper fixes one (M_Tile, PE-array) configuration at synthesis time; the
 TPU port instead tunes block shapes at runtime and must not re-tune for
 every call.  This cache is the synthesis artifact's software analogue: a
-JSON file mapping ``platform/dtype/bucket/backend`` keys to the winning
-``(bm, bn, bk)`` so `rgetrf`'s trailing updates, SDP's `rsyrk`-shaped calls,
-and repeated service traffic all reuse one tuned tile per shape bucket.
+JSON file mapping schema-versioned ``vN/platform/dtype/bucket/backend``
+keys to the winning ``(bm, bn, bk)`` — plus, for the slicing kernel, the
+tuned ``n_slices`` — so `rgetrf`'s trailing updates, SDP's `rsyrk`-shaped
+calls, and repeated service traffic all reuse one tuned tile per shape
+bucket.
 
 Shapes are bucketed to the next power of two per dimension, so a 500x500x500
 and a 512x512x512 GEMM share a tuning entry — the same coarsening the paper
@@ -26,9 +28,15 @@ import warnings
 from typing import Optional
 
 __all__ = ["PlanCache", "default_cache", "set_default_cache", "shape_bucket",
-           "cache_key"]
+           "cache_key", "SCHEMA"]
 
 _ENV_VAR = "REPRO_GEMM_CACHE"
+
+# entry-schema version, embedded in every key.  v2: entries may carry an
+# ``n_slices`` field (tuned alongside the blocks for the ozaki-pallas
+# backend); bumping the version orphans pre-slice-aware entries instead of
+# letting them half-describe a plan.
+SCHEMA = 2
 
 
 def _next_pow2(x: int, floor: int = 8) -> int:
@@ -43,15 +51,15 @@ def shape_bucket(m: int, k: int, n: int) -> str:
 
 def cache_key(platform: str, dtype_name: str, m: int, k: int, n: int,
               backend: str, nlimbs: int = 2) -> str:
-    """Cache key for one tuning bucket.
+    """Cache key for one tuning bucket (schema-versioned).
 
     Keys on the limb count so precision tiers tune independently (a QD tile
-    streams twice the limb planes of a DD tile and wants different blocks).
-    The 2-limb spelling is kept limb-suffix-free for compatibility with
-    caches written before the precision axis existed.
+    streams twice the limb planes of a DD tile and wants different blocks),
+    and on ``SCHEMA`` so entries written under an older entry layout are
+    orphaned rather than misread.
     """
     dt = dtype_name if nlimbs == 2 else f"{dtype_name}x{nlimbs}"
-    return f"{platform}/{dt}/{shape_bucket(m, k, n)}/{backend}"
+    return f"v{SCHEMA}/{platform}/{dt}/{shape_bucket(m, k, n)}/{backend}"
 
 
 class PlanCache:

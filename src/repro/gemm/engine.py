@@ -16,11 +16,21 @@ engine is limb-count generic:
     (``P(axis, None)``) — no all-gather on the result, matching the paper's
     Feed/Drain streaming where C' tiles drain independently.
 
-Backend kernels per tier: the Pallas systolic tile (``kernels/ddgemm.py`` /
-``kernels/qdgemm.py`` — same tile schedule, 2 vs 4 limb planes), the
-blocked-XLA fallbacks, the O(m*k*n) oracles, and — dd only — the Ozaki
-slicing path.  Padding to block multiples is exact in multi-limb arithmetic
-(zeros carry no rounding), so the engine owns all pad/clamp/slice logic.
+Backend kernels per tier: the Pallas systolic tiles (``kernels/ddgemm.py``
+/ ``kernels/qdgemm.py`` — same tile schedule, 2 vs 4 limb planes), the
+fused Ozaki-slice Pallas kernel (``kernels/ozgemm.py`` — both tiers,
+slice-pair dots on the matrix unit with in-VMEM recombination), the
+blocked-XLA fallbacks, the O(m*k*n) oracles, and — dd only — the whole-K
+Ozaki slicing path.  Padding to block multiples is exact in multi-limb
+arithmetic (zeros carry no rounding), so the engine owns all
+pad/clamp/slice logic.
+
+The engine also owns the Rgemm **alpha/beta epilogue**: ``execute``/
+``matmul`` accept optional ``alpha``/``beta``/``c`` operands.  On the
+``ozaki-pallas`` 2-D path the epilogue is fused into the kernel's drain
+step (the C' tile is scaled and combined before it leaves VMEM); every
+other path applies the identical tier arithmetic as a post-step, so
+results match cell-for-cell across backends.
 """
 
 from __future__ import annotations
@@ -81,9 +91,63 @@ def _execute_pallas(plan: GemmPlan, a, b):
     return mp.from_limbs([o[:m, :n] for o in out])
 
 
+def _ozaki_pallas_params(plan: GemmPlan, bk: int):
+    """(beta, n_slices, slice_dtype_name, acc_dtype_name) for a slab depth.
+
+    The plan solved (beta, n_slices) for its own bk; a re-clamped smaller
+    slab only gains exactness headroom, so the planned values stay valid.
+    Hand-built plans without solved parameters get them solved here.
+    """
+    from repro.core import ozaki as _ozaki
+
+    slice_dtype = jnp.dtype(plan.slice_dtype) if plan.slice_dtype \
+        else jnp.float64
+    acc_dtype = jnp.dtype(plan.acc_dtype) if plan.acc_dtype else jnp.float64
+    beta, n_slices = plan.slice_beta, plan.n_slices
+    if beta is None or n_slices is None:
+        from .plan import OZAKI_TARGET_BITS
+
+        beta, n_slices = _ozaki.slice_params(
+            bk, acc_dtype, slice_dtype,
+            target_bits=plan.target_bits or OZAKI_TARGET_BITS[plan.precision],
+            n_slices=n_slices, beta=beta)
+    return beta, n_slices, slice_dtype.name, acc_dtype.name
+
+
+def _execute_ozaki_pallas(plan: GemmPlan, a, b, alpha=None, beta=None,
+                          c=None):
+    """The fused Ozaki-slice kernel, optionally with the in-drain epilogue."""
+    from .plan import _clamp_blocks
+    from repro.kernels.ozgemm import ozgemm_kernel_call
+
+    m, k = a.shape
+    _, n = b.shape
+    blk = _clamp_blocks(m, k, n, plan.blocks)
+    bm, bn, bk = blk["bm"], blk["bn"], blk["bk"]
+    sbeta, n_slices, sdt, adt = _ozaki_pallas_params(plan, bk)
+    mpad, npad, kpad = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    operands = list(mp.limbs(_pad(a, mpad, kpad)))
+    operands += list(mp.limbs(_pad(b, kpad, npad)))
+    epilogue = "none"
+    if alpha is not None:
+        epilogue = "alpha" if c is None else "full"
+        operands += [l.reshape(1, 1) for l in mp.limbs(alpha)]
+        if c is not None:
+            operands += [l.reshape(1, 1) for l in mp.limbs(beta)]
+            operands += list(mp.limbs(_pad(c, mpad, npad)))
+    out = ozgemm_kernel_call(*operands, bm=bm, bn=bn, bk=bk, beta=sbeta,
+                             n_slices=n_slices, slice_dtype_name=sdt,
+                             acc_dtype_name=adt, epilogue=epilogue,
+                             full=bool(plan.full),
+                             interpret=plan.interpret)
+    return mp.from_limbs([o[:m, :n] for o in out])
+
+
 def _execute_2d(plan: GemmPlan, a, b):
     if plan.backend == "pallas":
         return _execute_pallas(plan, a, b)
+    if plan.backend == "ozaki-pallas":
+        return _execute_ozaki_pallas(plan, a, b)
     if plan.backend == "ozaki":
         if plan.precision != "dd":
             raise ValueError("ozaki backend has no qd tier (make_plan "
@@ -97,6 +161,8 @@ def _execute_2d(plan: GemmPlan, a, b):
             kw["acc_dtype"] = jnp.dtype(plan.acc_dtype)
         if plan.n_slices is not None:
             kw["n_slices"] = plan.n_slices
+        if plan.slice_beta is not None:
+            kw["beta"] = plan.slice_beta
         if plan.target_bits is not None:
             kw["target_bits"] = plan.target_bits
         if plan.full is not None:
@@ -168,6 +234,39 @@ def _execute_batched_jit(a, b, *, plan: GemmPlan):
     return _execute_batched(plan, a, b)
 
 
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _execute_fused_alpha_jit(a, b, alpha, *, plan: GemmPlan):
+    return _execute_ozaki_pallas(plan, a, b, alpha=alpha)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _execute_fused_full_jit(a, b, alpha, beta, c, *, plan: GemmPlan):
+    return _execute_ozaki_pallas(plan, a, b, alpha=alpha, beta=beta, c=c)
+
+
+# --------------------------------------------------------------------------
+# alpha/beta epilogue (paper Eq. 1, host side of the Rgemm split)
+# --------------------------------------------------------------------------
+
+
+def _as_scalar(x, precision: str, dtype):
+    """Coerce a python float / multi-limb scalar to the operands' tier."""
+    try:
+        return mp.promote(x, precision)
+    except TypeError:
+        return mp.from_float(jnp.asarray(x, dtype), precision)
+
+
+def _apply_epilogue(out, alpha, beta, c):
+    """out = alpha * out [+ beta * c] in the operands' own tier — the
+    post-step form, numerically identical to the kernel-fused drain."""
+    if alpha is not None:
+        out = mp.mul(mp.broadcast_to(alpha, out.shape), out)
+    if c is not None:
+        out = mp.add(out, mp.mul(mp.broadcast_to(beta, c.shape), c))
+    return out
+
+
 # --------------------------------------------------------------------------
 # sharded execution (M-dim row sharding, all-gather-free output)
 # --------------------------------------------------------------------------
@@ -209,8 +308,16 @@ def _execute_sharded(plan: GemmPlan, a, b):
 # --------------------------------------------------------------------------
 
 
-def execute(plan: GemmPlan, a, b):
-    """Run C = A @ B under a plan.  A: (..., m, k), B: (..., k, n)."""
+def execute(plan: GemmPlan, a, b, *, alpha=None, beta=None, c=None):
+    """Run C = alpha * (A @ B) + beta * C under a plan.
+
+    A: (..., m, k), B: (..., k, n).  ``alpha``/``beta`` (python floats or
+    tier scalars) and ``c`` are the optional Rgemm epilogue: fused into the
+    kernel drain on the 2-D ``ozaki-pallas`` path, applied as an identical
+    tier-arithmetic post-step everywhere else.  With no epilogue operands
+    this is plain C = A @ B; with ``c`` alone, alpha and beta default to
+    1.0 (C is *added*, never silently dropped).
+    """
     prec = mp.precision_of(a)
     if mp.precision_of(b) != prec:
         raise TypeError(f"operand tiers differ: {mp.precision_of(a)} vs "
@@ -222,6 +329,16 @@ def execute(plan: GemmPlan, a, b):
             f"(engine.matmul infers this from the operand type)")
     if a.shape[-1] != b.shape[-2]:
         raise ValueError(f"inner dims mismatch: {a.shape} x {b.shape}")
+    limb_dtype = mp.limbs(a)[0].dtype
+    if c is not None and alpha is None:
+        alpha = 1.0
+    if alpha is not None:
+        alpha = _as_scalar(alpha, prec, limb_dtype)
+    if c is not None:
+        beta = _as_scalar(1.0 if beta is None else beta, prec, limb_dtype)
+        if mp.precision_of(c) != prec:
+            raise TypeError(f"C tier {mp.precision_of(c)} != operand "
+                            f"tier {prec}")
     batched = len(a.shape) > 2 or len(b.shape) > 2
     if batched:
         if plan.mesh is not None:
@@ -230,13 +347,20 @@ def execute(plan: GemmPlan, a, b):
             raise ValueError(
                 "plan was made for 2-D operands but inputs have batch dims; "
                 "rebuild with batch_shape= (engine.matmul does this)")
-        return _execute_batched_jit(a, b, plan=plan)
+        return _apply_epilogue(_execute_batched_jit(a, b, plan=plan),
+                               alpha, beta, c)
     if plan.mesh is not None and plan.shard_axis is not None:
-        return _execute_sharded(plan, a, b)
-    return _execute_2d_jit(a, b, plan=plan)
+        return _apply_epilogue(_execute_sharded(plan, a, b), alpha, beta, c)
+    if alpha is not None and plan.backend == "ozaki-pallas":
+        # fused drain: the epilogue runs in VMEM before the C' tile drains
+        if c is None:
+            return _execute_fused_alpha_jit(a, b, alpha, plan=plan)
+        return _execute_fused_full_jit(a, b, alpha, beta, c, plan=plan)
+    return _apply_epilogue(_execute_2d_jit(a, b, plan=plan), alpha, beta, c)
 
 
-def matmul(a, b, *, plan: Optional[GemmPlan] = None, **overrides):
+def matmul(a, b, *, plan: Optional[GemmPlan] = None, alpha=None, beta=None,
+           c=None, **overrides):
     """Plan-and-execute convenience: the repo-wide GEMM entry point.
 
     The precision tier is inferred from the operand type (``dd.DD`` ->
@@ -244,7 +368,9 @@ def matmul(a, b, *, plan: Optional[GemmPlan] = None, **overrides):
     forwarded to ``make_plan`` (backend=, bm/bn/bk=, mesh=, shard_axis=,
     ...); pass a prebuilt ``plan`` to skip planning.  The two are exclusive
     — a plan already fixes every decision, so overrides alongside it would
-    be silently dead.
+    be silently dead.  ``alpha``/``beta``/``c`` are the optional Rgemm
+    epilogue operands (see ``execute``); ``core.blas.rgemm`` routes its
+    epilogue through here so fusion-capable backends can claim it.
     """
     if plan is not None and overrides:
         raise ValueError(
@@ -260,4 +386,4 @@ def matmul(a, b, *, plan: Optional[GemmPlan] = None, **overrides):
         overrides.setdefault("precision", mp.precision_of(a))
         plan = make_plan(m, k, n, dtype=a.limbs()[0].dtype,
                          batch_shape=batch_shape, **overrides)
-    return execute(plan, a, b)
+    return execute(plan, a, b, alpha=alpha, beta=beta, c=c)

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Any, Optional, Tuple
 
 import jax
@@ -30,9 +31,17 @@ from repro.core.mp import PRECISIONS
 from . import cache as plan_cache
 
 __all__ = ["GemmPlan", "make_plan", "resolve_backend", "round_up",
-           "BACKENDS", "PRECISIONS", "DEFAULT_BLOCKS"]
+           "BACKENDS", "PRECISIONS", "DEFAULT_BLOCKS", "OZAKI_TARGET_BITS"]
 
-BACKENDS = ("auto", "pallas", "ozaki", "xla", "ref")
+BACKENDS = ("auto", "pallas", "ozaki", "ozaki-pallas", "xla", "ref")
+
+# backends that decompose operands into error-free slices; their plans
+# carry solved (slice_beta, n_slices) so kernels never re-derive them
+_SLICED_BACKENDS = ("ozaki", "ozaki-pallas")
+
+# default significand coverage per tier for the slicing backends: dd is
+# binary128-class (the paper's format), qd is the 4-limb ~212-bit tier
+OZAKI_TARGET_BITS = {"dd": 107, "qd": 212}
 
 # (bm, bn, bk) heuristic defaults: the "8x16 PE / M_Tile=512" analogue from
 # the bench_tile sweep — VMEM cost = (bm*bk + bk*bn + 2*bm*bn) * 2 limbs * 4B.
@@ -63,7 +72,8 @@ class GemmPlan:
     mesh: Any = dataclasses.field(default=None, compare=False, repr=False)
     slice_dtype: Optional[str] = None  # ozaki operand slices (bf16 on TPU)
     acc_dtype: Optional[str] = None    # ozaki accumulator (f32 on TPU)
-    n_slices: Optional[int] = None     # ozaki slice-count override
+    n_slices: Optional[int] = None     # ozaki slices per operand (solved)
+    slice_beta: Optional[int] = None   # ozaki bits per slice (solved)
     target_bits: Optional[int] = None  # ozaki significand coverage target
     full: Optional[bool] = None        # ozaki: keep sub-target slice products
     source: str = "heuristic"          # heuristic | tuned | override
@@ -128,11 +138,12 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
     be = resolve_backend(backend)
     if precision == "qd" and be == "ozaki":
         if backend == "ozaki":
-            # explicit request: fail loudly — the Ozaki slice count for a
-            # 212-bit target makes the slice-product sweep useless
+            # explicit request: fail loudly — whole-K slicing for a 212-bit
+            # target makes the slice-product sweep useless (the per-slab
+            # 'ozaki-pallas' kernel is the qd slicing path)
             raise ValueError(
                 "backend 'ozaki' has no qd tier (slice count explodes past "
-                "the 212-bit target); use pallas, xla, or ref")
+                "the 212-bit target); use ozaki-pallas, pallas, xla, or ref")
         be = "xla"  # 'auto'/env default 'ozaki' is a dd-oriented hint
     platform = platform or jax.default_backend()
     dtype = jnp.dtype(dtype)
@@ -143,7 +154,8 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
 
     source = "heuristic"
     blocks = dict(DEFAULT_BLOCKS)
-    if use_cache and be in ("pallas", "xla") and (bm, bn, bk) == (None,) * 3:
+    if use_cache and be in ("pallas", "xla", "ozaki-pallas") \
+            and (bm, bn, bk) == (None,) * 3:
         key = plan_cache.cache_key(platform, dtype.name, m, k, n, be,
                                    nlimbs=PRECISIONS[precision])
         tuned = plan_cache.default_cache().get(key)
@@ -155,6 +167,17 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
                 for x in ("bm", "bn", "bk")):
             blocks = {x: int(tuned[x]) for x in ("bm", "bn", "bk")}
             source = "tuned"
+            # tuned n_slices was measured for the DEFAULT coverage target
+            # and platform slice/acc dtypes: a caller-specified target or
+            # dtype override must re-solve, not adopt it (bf16 slices cap
+            # beta at 8, so an f64-tuned count would under-cover by ~70
+            # bits)
+            if be == "ozaki-pallas" and n_slices is None and \
+                    target_bits is None and \
+                    slice_dtype is None and acc_dtype is None and \
+                    isinstance(tuned.get("n_slices"), int) and \
+                    tuned["n_slices"] > 1:
+                n_slices = tuned["n_slices"]  # tuned alongside the blocks
     blocks = _clamp_blocks(m, k, n, blocks)
     if bm or bn or bk:
         source = "override"
@@ -162,10 +185,32 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
     blocks["bn"] = bn or blocks["bn"]
     blocks["bk"] = bk or blocks["bk"]
 
-    if be == "ozaki" and slice_dtype is None and acc_dtype is None:
-        from repro.core.ozaki import platform_dtypes
+    slice_beta = None
+    if be in _SLICED_BACKENDS:
+        from repro.core import ozaki as _ozaki
 
-        slice_dtype, acc_dtype = platform_dtypes(platform)
+        if slice_dtype is None and acc_dtype is None:
+            slice_dtype, acc_dtype = _ozaki.platform_dtypes(platform)
+        target_bits = target_bits or OZAKI_TARGET_BITS[precision]
+        # the fused kernel slices per K-slab (depth bk), the XLA path
+        # slices the whole K — the exactness fixpoint sees that depth
+        depth = blocks["bk"] if be == "ozaki-pallas" else k
+        try:
+            slice_beta, n_slices = _ozaki.slice_params(
+                depth, acc_dtype or jnp.float64, slice_dtype,
+                target_bits=target_bits, n_slices=n_slices)
+        except ValueError as e:
+            # K too deep for exact slicing in the accumulator dtype: the
+            # plan degrades to the portable blocked-XLA backend rather
+            # than crashing the caller (tested in test_ozgemm_kernel.py)
+            warnings.warn(
+                f"ozaki slicing infeasible for this problem ({e}); "
+                f"falling back to the 'xla' backend", RuntimeWarning,
+                stacklevel=2)
+            be = "xla"
+            slice_dtype = acc_dtype = None
+            n_slices = target_bits = None
+            full = None
 
     if mesh is not None and shard_axis is None:
         shard_axis = mesh.axis_names[0]
@@ -177,5 +222,6 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
         batch_shape=tuple(batch_shape), shard_axis=shard_axis, mesh=mesh,
         slice_dtype=jnp.dtype(slice_dtype).name if slice_dtype else None,
         acc_dtype=jnp.dtype(acc_dtype).name if acc_dtype else None,
-        n_slices=n_slices, target_bits=target_bits, full=full,
+        n_slices=n_slices, slice_beta=slice_beta,
+        target_bits=target_bits, full=full,
         source=source, **blocks)

@@ -3,16 +3,19 @@
 Pins each engine tier's observed relative error on the exact-rational
 Hilbert GEMM (core/accuracy.py — the same computation bench_accuracy emits
 to BENCH_ACCURACY.json): dd must stay within 2^-100, qd within 2^-190.
-A regression in the EFT chains, the renormalization sweeps, or the engine's
-pad/dispatch plumbing shows up here as lost bits long before it corrupts an
-end-to-end SDP solve.
+The gate runs per backend (GATED_BACKENDS): the engine default (xla), the
+diagonal-grouped whole-K Ozaki path (dd), and the fused per-slab
+``ozaki-pallas`` kernel (dd and qd) — so a lost bit in the EFT chains, the
+slice-grid ladder, the grouped native summation, or the engine's
+pad/dispatch plumbing shows up here long before it corrupts an end-to-end
+SDP solve.
 """
 
 import json
 
 import pytest
 
-from repro.core.accuracy import GATES, write_accuracy_json
+from repro.core.accuracy import GATED_BACKENDS, GATES, write_accuracy_json
 
 
 @pytest.fixture(scope="module")
@@ -31,11 +34,24 @@ def test_qd_tier_holds_2_pow_minus_190(accuracy_doc):
     assert doc["tiers"]["qd"]["rel_err"] <= 2.0 ** -190
 
 
+@pytest.mark.parametrize("backend,tier", [
+    (be, tier) for be, tiers in GATED_BACKENDS.items() for tier in tiers])
+def test_backend_tier_holds_its_gate(accuracy_doc, backend, tier):
+    doc, _ = accuracy_doc
+    row = doc["backends"][backend][tier]
+    assert row["rel_err"] <= GATES[tier], (backend, tier, row)
+
+
 def test_artifact_schema_round_trips(accuracy_doc):
     doc, path = accuracy_doc
     on_disk = json.loads(path.read_text())
-    assert on_disk["schema"] == "repro-accuracy/v1"
+    assert on_disk["schema"] == "repro-accuracy/v2"
     assert set(on_disk["tiers"]) == set(GATES)
+    assert set(on_disk["backends"]) == set(GATED_BACKENDS)
     for tier, row in on_disk["tiers"].items():
         assert row["passes"] is True, (tier, row)
         assert row["gate"] == GATES[tier]
+    for be, tiers in on_disk["backends"].items():
+        assert set(tiers) == set(GATED_BACKENDS[be])
+        for tier, row in tiers.items():
+            assert row["passes"] is True, (be, tier, row)

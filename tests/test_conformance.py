@@ -17,6 +17,7 @@ import pytest
 
 from repro import gemm
 from repro.core import mp
+from repro.core.accuracy import max_rel_err as _rel_err
 from repro.core.blas import rgemm
 from repro.kernels.ref import ddgemm_ref, qdgemm_ref
 
@@ -25,9 +26,11 @@ from repro.kernels.ref import ddgemm_ref, qdgemm_ref
 ULP = {"dd": 2.0 ** -104, "qd": 2.0 ** -205}
 REF = {"dd": ddgemm_ref, "qd": qdgemm_ref}
 
-# the support matrix: ozaki has no qd tier (rejected below, separately)
-CELLS = [(be, "dd") for be in ("pallas", "ozaki", "xla", "ref")] + \
-        [(be, "qd") for be in ("pallas", "xla", "ref")]
+# the support matrix: whole-K ozaki has no qd tier (rejected below,
+# separately); the per-slab ozaki-pallas kernel supports both tiers
+CELLS = [(be, "dd") for be in ("pallas", "ozaki", "ozaki-pallas",
+                               "xla", "ref")] + \
+        [(be, "qd") for be in ("pallas", "ozaki-pallas", "xla", "ref")]
 
 # square / non-square / odd-K (prime) so every backend pads and clamps
 SHAPES = [(16, 16, 16), (13, 7, 9), (8, 33, 12)]
@@ -50,13 +53,6 @@ def _rand(precision, shape, seed):
             jnp.asarray(rng.standard_normal(shape) * scale), precision)
         out = mp.add(out, extra)
     return out
-
-
-def _rel_err(got, want) -> float:
-    """Max |got - want| / max|want|, measured in the operands' tier."""
-    diff = np.abs(np.asarray(mp.to_float(mp.sub(got, want)), np.float64))
-    scale = max(1.0, float(np.abs(np.asarray(mp.to_float(want))).max()))
-    return float(diff.max()) / scale
 
 
 @pytest.mark.parametrize("m,k,n", SHAPES)

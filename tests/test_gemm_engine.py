@@ -147,7 +147,7 @@ rng = np.random.default_rng(0)
 a = dd.from_float(jnp.asarray(rng.standard_normal((30, 16))))
 b = dd.from_float(jnp.asarray(rng.standard_normal((16, 12))))
 want = ddgemm_ref(a, b)
-for be in ("pallas", "xla"):
+for be in ("pallas", "ozaki-pallas", "xla"):
     got = gemm.matmul(a, b, backend=be, mesh=mesh)
     err = np.abs((np.asarray(got.hi) - np.asarray(want.hi))
                  + (np.asarray(got.lo) - np.asarray(want.lo))).max()

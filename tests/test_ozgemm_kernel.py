@@ -1,0 +1,239 @@
+"""Fused Ozaki-slice Pallas kernel + its plan/engine/autotune plumbing.
+
+Covers the ISSUE-3 acceptance surface beyond the conformance matrix:
+block-shape sweeps (including slabs that force K padding), the in-drain
+alpha/beta epilogue vs the post-step form, the bf16-slice/f32-acc MXU
+configuration exercised on CPU interpret, qd-tier slab recombination, the
+plan as the single source of slice parameters, the too-deep-K fallback to
+xla, and the n_slices-aware autotune cache round-trip.
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import gemm
+from repro.core import dd, mp, ozaki
+from repro.core.accuracy import max_rel_err as _rel_err
+from repro.core.blas import rgemm
+from repro.kernels.ref import ddgemm_ref, qdgemm_ref
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path):
+    cache = gemm.PlanCache(str(tmp_path / "plans.json"))
+    gemm.set_default_cache(cache)
+    yield cache
+    gemm.set_default_cache(None)
+
+
+def _rand(precision, shape, seed):
+    rng = np.random.default_rng(seed)
+    out = mp.from_float(jnp.asarray(rng.standard_normal(shape)), precision)
+    for scale in (2.0 ** -53, 2.0 ** -106, 2.0 ** -159)[: mp.nlimbs(out) - 1]:
+        out = mp.add(out, mp.from_float(
+            jnp.asarray(rng.standard_normal(shape) * scale), precision))
+    return out
+
+
+@pytest.mark.parametrize("blocks", [
+    dict(bm=8, bn=8, bk=8),       # many tiles, K padded (k=20 -> 24)
+    dict(bm=16, bn=8, bk=16),     # uneven tiles
+    dict(bm=32, bn=32, bk=8),     # single M/N tile, K streamed
+])
+def test_block_sweep_matches_oracle(blocks, tmp_cache):
+    m, k, n = 19, 20, 11
+    a, b = _rand("dd", (m, k), 1), _rand("dd", (k, n), 2)
+    got = gemm.matmul(a, b, backend="ozaki-pallas", **blocks)
+    assert _rel_err(got, ddgemm_ref(a, b)) < 16 * k * 2.0 ** -104
+
+
+def test_qd_tier_slab_recombination(tmp_cache):
+    m, k, n = 10, 24, 9
+    a, b = _rand("qd", (m, k), 3), _rand("qd", (k, n), 4)
+    plan = gemm.make_plan(m, k, n, backend="ozaki-pallas", precision="qd")
+    # the qd tier targets ~212 bits: the slab fixpoint must cover them
+    assert plan.target_bits == 212
+    assert plan.slice_beta * plan.n_slices >= 212
+    got = gemm.execute(plan, a, b)
+    assert _rel_err(got, qdgemm_ref(a, b)) < 16 * k * 2.0 ** -205
+
+
+def test_fused_epilogue_matches_post_step(tmp_cache):
+    m, k, n = 9, 17, 7
+    a, b, c = _rand("dd", (m, k), 5), _rand("dd", (k, n), 6), \
+        _rand("dd", (m, n), 7)
+    one = mp.from_float(jnp.asarray(1.0), "dd")
+    alpha = mp.div(one, mp.from_float(jnp.asarray(3.0), "dd"))
+    beta = mp.div(mp.neg(one), mp.from_float(jnp.asarray(7.0), "dd"))
+    # fused: ozaki-pallas applies alpha/beta inside the kernel drain
+    got = rgemm("n", "n", alpha, a, b, beta, c, backend="ozaki-pallas")
+    # post-step oracle: ref product + identical tier epilogue
+    prod = ddgemm_ref(a, b)
+    want = mp.add(mp.mul(mp.broadcast_to(alpha, prod.shape), prod),
+                  mp.mul(mp.broadcast_to(beta, c.shape), c))
+    assert _rel_err(got, want) < 16 * k * 2.0 ** -104
+    # alpha-only fusion (no C term)
+    got_a = rgemm("n", "n", alpha, a, b, 0.0, backend="ozaki-pallas")
+    want_a = mp.mul(mp.broadcast_to(alpha, prod.shape), prod)
+    assert _rel_err(got_a, want_a) < 16 * k * 2.0 ** -104
+
+
+def test_bf16_slices_f32_acc_on_interpret(tmp_cache):
+    # the real-TPU MXU configuration, validated on CPU interpret: bf16
+    # slices, f32 accumulation, per-row shared power-of-two scaling
+    m, k, n = 12, 16, 10
+    a, b = _rand("dd", (m, k), 8), _rand("dd", (k, n), 9)
+    got = gemm.matmul(a, b, backend="ozaki-pallas",
+                      slice_dtype=jnp.bfloat16, acc_dtype=jnp.float32)
+    # bf16 slices carry ~8 bits each: coverage is capped by the slab
+    # fixpoint, still far beyond one native dot
+    assert _rel_err(got, ddgemm_ref(a, b)) < 2.0 ** -90
+
+
+def test_plan_is_single_source_of_slice_params(tmp_cache):
+    plan = gemm.make_plan(16, 32, 16, backend="ozaki-pallas")
+    # the plan carries the solved pair; the engine consumes, never re-derives
+    want = ozaki.slice_params(plan.bk, jnp.dtype(plan.acc_dtype),
+                              jnp.dtype(plan.slice_dtype),
+                              target_bits=plan.target_bits)
+    assert (plan.slice_beta, plan.n_slices) == want
+    # the whole-K path stores its own depth's parameters
+    plan_xla_oz = gemm.make_plan(16, 32, 16, backend="ozaki")
+    want = ozaki.slice_params(32, jnp.dtype(plan_xla_oz.acc_dtype),
+                              jnp.dtype(plan_xla_oz.slice_dtype),
+                              target_bits=plan_xla_oz.target_bits)
+    assert (plan_xla_oz.slice_beta, plan_xla_oz.n_slices) == want
+    # a pinned n_slices survives planning and still solves beta for it
+    pinned = gemm.make_plan(16, 32, 16, backend="ozaki-pallas", n_slices=7)
+    assert pinned.n_slices == 7 and pinned.slice_beta >= 1
+
+
+def test_too_deep_k_falls_back_to_xla(tmp_cache):
+    # f32 accumulation over k > 2^22 leaves no exact slice bits: the plan
+    # must degrade to the portable xla backend with a warning, not raise
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        plan = gemm.make_plan(8, 1 << 23, 8, backend="ozaki",
+                              acc_dtype=jnp.float32,
+                              slice_dtype=jnp.float32)
+    assert plan.backend == "xla"
+    assert plan.n_slices is None and plan.slice_beta is None
+    # feasible depths never warn
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        plan = gemm.make_plan(8, 64, 8, backend="ozaki")
+    assert plan.backend == "ozaki"
+
+
+def test_autotune_persists_n_slices(tmp_cache):
+    plan = gemm.autotune(24, 24, 24, backend="ozaki-pallas",
+                         candidates=[{"bm": 8, "bn": 8, "bk": 8},
+                                     {"bm": 24, "bn": 24, "bk": 8,
+                                      "n_slices": 6}],
+                         iters=1)
+    assert plan.source == "tuned" and plan.backend == "ozaki-pallas"
+    key = gemm.cache_key("cpu", "float64", 24, 24, 24, "ozaki-pallas")
+    entry = tmp_cache.get(key)
+    assert entry is not None and entry["n_slices"] == plan.n_slices
+    # the planner adopts blocks AND slice count from the tuned entry
+    replanned = gemm.make_plan(24, 24, 24, backend="ozaki-pallas",
+                               platform="cpu")
+    assert replanned.source == "tuned"
+    assert (replanned.bm, replanned.bn, replanned.bk, replanned.n_slices) \
+        == (plan.bm, plan.bn, plan.bk, plan.n_slices)
+
+
+def test_tuned_n_slices_not_adopted_under_dtype_override(tmp_cache):
+    # a slice count tuned for f64/f64 covers ~5*23 bits; with bf16 slices
+    # beta caps at 8, so adopting it would silently lose ~70 bits — the
+    # planner must re-solve when the caller overrides slice/acc dtypes
+    key = gemm.cache_key("cpu", "float64", 24, 24, 24, "ozaki-pallas")
+    tmp_cache.put(key, {"bm": 24, "bn": 24, "bk": 8, "n_slices": 5})
+    plan = gemm.make_plan(24, 24, 24, backend="ozaki-pallas",
+                          platform="cpu", slice_dtype=jnp.bfloat16,
+                          acc_dtype=jnp.float32)
+    assert plan.slice_beta * plan.n_slices >= 107
+
+
+def test_pinned_beta_past_exactness_ceiling_raises(tmp_cache):
+    # a pinned beta violating 2*beta + log2(k*s) <= p_acc would silently
+    # break the exact native summation: it must be rejected at entry
+    a, b = _rand("dd", (8, 16), 19), _rand("dd", (16, 8), 20)
+    with pytest.raises(ValueError, match="exact accumulation"):
+        ozaki.ozaki_gemm(a, b, beta=26)
+
+
+def test_cache_key_schema_versioned(tmp_cache):
+    # the v2 schema bump orphans pre-n_slices entries instead of misreading
+    from repro.gemm.cache import SCHEMA
+
+    key = gemm.cache_key("cpu", "float64", 64, 64, 64, "ozaki-pallas")
+    assert key.startswith(f"v{SCHEMA}/")
+
+
+def test_bf16_ladder_survives_tiny_rows(tmp_cache):
+    # ladder normalization: slice i is scaled by 2^(i*beta) back to O(1),
+    # so deep slices of tiny rows do NOT underflow the narrow dtype (a
+    # single shared scale would leave slice i at 2^(-i*beta) relative,
+    # flushing the low end of the ladder to zero)
+    rng = np.random.default_rng(12)
+    a_np = rng.standard_normal((8, 16)) * 1e-30
+    b_np = rng.standard_normal((16, 8)) * 1e+25
+    a = dd.from_float(jnp.asarray(a_np))
+    b = dd.from_float(jnp.asarray(b_np))
+    got = gemm.matmul(a, b, backend="ozaki-pallas",
+                      slice_dtype=jnp.bfloat16, acc_dtype=jnp.float32)
+    assert _rel_err(got, ddgemm_ref(a, b)) < 2.0 ** -90
+
+
+def test_full_flag_reaches_the_kernel(tmp_cache):
+    # full=True keeps the sub-target slice products: on pure-f64 inputs the
+    # full accumulation is (near-)exact, visibly better than truncated
+    rng = np.random.default_rng(13)
+    a = dd.from_float(jnp.asarray(rng.standard_normal((8, 12))))
+    b = dd.from_float(jnp.asarray(rng.standard_normal((12, 8))))
+    want = ddgemm_ref(a, b)
+    got_full = gemm.matmul(a, b, backend="ozaki-pallas", full=True,
+                           bm=8, bn=8, bk=16)
+    assert _rel_err(got_full, want) <= 2.0 ** -100
+
+
+def test_matmul_c_without_beta_adds_c(tmp_cache):
+    # c= without beta= must ADD C (beta defaults to 1), never drop it
+    a, b, c = _rand("dd", (6, 5), 14), _rand("dd", (5, 4), 15), \
+        _rand("dd", (6, 4), 16)
+    got = gemm.matmul(a, b, c=c, backend="xla")
+    want = mp.add(ddgemm_ref(a, b), c)
+    assert _rel_err(got, want) < 16 * 5 * 2.0 ** -104
+
+
+def test_ozaki_gemm_accepts_pinned_beta(tmp_cache):
+    # beta= without n_slices= solves the slice count instead of crashing
+    a, b = _rand("dd", (8, 16), 17), _rand("dd", (16, 8), 18)
+    got = ozaki.ozaki_gemm(a, b, beta=20)
+    assert _rel_err(got, ddgemm_ref(a, b)) < 16 * 16 * 2.0 ** -104
+
+
+def test_sharded_single_device_mesh(tmp_cache):
+    # row-sharded execution runs the fused kernel per device panel
+    from jax.sharding import Mesh
+    import jax
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("rows",))
+    a, b = _rand("dd", (26, 10), 10), _rand("dd", (10, 18), 11)
+    got = gemm.matmul(a, b, backend="ozaki-pallas", mesh=mesh)
+    assert _rel_err(got, ddgemm_ref(a, b)) < 16 * 10 * 2.0 ** -104
+
+
+def test_diagonal_grouping_is_exact_on_worst_case(tmp_cache):
+    # all-positive operands maximize carry propagation in the grouped
+    # native sums: any span overflow past p_acc shows up as lost bits here
+    rng = np.random.default_rng(11)
+    k = 64
+    a = dd.from_float(jnp.asarray(rng.random((16, k))))
+    b = dd.from_float(jnp.asarray(rng.random((k, 16))))
+    for backend in ("ozaki", "ozaki-pallas"):
+        got = gemm.matmul(a, b, backend=backend)
+        assert _rel_err(got, ddgemm_ref(a, b)) < 16 * k * 2.0 ** -104, backend
