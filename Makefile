@@ -2,8 +2,8 @@
 
 PY ?= python
 
-.PHONY: tier1 test-fast conformance bench bench-gemm bench-smoke \
-	bench-accuracy tune ozaki-tune
+.PHONY: tier1 test-fast conformance solver-gates bench bench-gemm \
+	bench-smoke bench-accuracy bench-lu tune ozaki-tune
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -11,10 +11,19 @@ tier1:
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
 
-# cross-backend x cross-precision matrix vs the ref oracles (CI job)
+# cross-backend x cross-precision matrix vs the ref oracles (CI job);
+# the solver-marked cells are deselected here — among the focused CI
+# jobs they run only in solver-gates (tier1 remains the full sweep and
+# intentionally covers everything)
 conformance:
-	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_conformance.py \
-	tests/test_accuracy_gate.py
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not solver" \
+	tests/test_conformance.py tests/test_accuracy_gate.py
+
+# tiered refinement solver + LAPACK-grade residual gates (CI job): every
+# test carrying the `solver` marker — the exact-rational factorization
+# gates, the pivot/TRSM property layer, the solver conformance axis
+solver-gates:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m solver
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
@@ -32,6 +41,11 @@ bench-smoke:
 # exact-rational Hilbert case; the accuracy regression artifact)
 bench-accuracy:
 	PYTHONPATH=src $(PY) -m benchmarks.run bench_accuracy
+
+# blocked LU + the refinement-ladder sweep; emits BENCH_LU.json (the
+# factor-cheap / refine-at-target cost trajectory, uploaded by CI)
+bench-lu:
+	PYTHONPATH=src $(PY) -m benchmarks.run bench_lu
 
 # warm the on-disk GEMM plan cache for the common shape buckets
 tune:

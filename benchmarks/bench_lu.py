@@ -1,21 +1,31 @@
-"""Paper Fig. 8: blocked LU decomposition (Rgetrf) performance.
+"""Paper Fig. 8: blocked LU decomposition (Rgetrf) performance + the
+refinement ladder's cost story.
 
 GFlops = (2/3 n^3) / T  (Eq. 7), block size b swept as in the paper
 (their optimum: b=108..144 on Agilex).  Accuracy: max |PA - LU| must sit at
 binary128-class levels (paper's E_L1 ~ 1e-31..1e-28).
+
+The refinement sweep prices the tiered solver (repro.solve): one
+``rgesv`` row per (factor_tier -> target_tier) rung pair against the
+direct solve at the target tier, reporting wall time, refinement
+iterations, escalations, and the final backward error.  This is the
+paper's application claim in numbers — factoring at a cheap rung and
+refining GEMM-rich residuals at the target tier beats paying the
+expensive factorization up front.  Emits ``BENCH_LU.json`` (uploaded by
+CI's solver-gates job).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import dd
-from repro.core.linalg import rgetrf
-from .common import emit, rand_dd, time_fn
+from repro.core import dd, mp
+from repro.core.linalg import lu_solve, rgetrf
+from repro.solve import LADDER_CELLS, rgesv
+from .common import dump_json, emit, rand_dd, time_fn
 
 
-def run():
-    rng = np.random.default_rng(0)
+def _fig8():
     for n, blocks in ((96, (16, 32)), (192, (16, 32, 64))):
         a = rand_dd((n, n), seed=n)
         for b in blocks:
@@ -25,9 +35,55 @@ def run():
             l = np.tril(lu_np, -1) + np.eye(n)
             u = np.triu(lu_np)
             pa = np.asarray(dd.to_float(a)).copy()
-            for j, p in enumerate(piv):
+            for j, p in enumerate(np.asarray(piv)):
                 pa[[j, p]] = pa[[p, j]]
             resid = float(np.abs(l @ u - pa).max())
             gflops = (2 / 3) * n**3 / t / 1e9
             emit(f"lu_fig8/n={n}_b={b}", t * 1e6,
                  f"gflops={gflops:.4f};max_resid={resid:.1e}")
+
+
+# the sweep: every meaningful rung pair (the solver's own canonical
+# table); (tier, tier) rows double as the direct-solve baselines the
+# cheap-factor rows are judged against
+REFINE_CELLS = LADDER_CELLS
+
+
+def _refine_sweep(n: int = 48, nrhs: int = 4):
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n)) + n * np.eye(n)
+    b = rng.standard_normal((n, nrhs))
+    for factor_tier, target_tier in REFINE_CELLS:
+
+        def solve():
+            x, info = rgesv(a, b, factor_tier=factor_tier,
+                            target_tier=target_tier, backend="xla", block=16)
+            mp.limbs(x)[0].block_until_ready()
+            return info
+
+        info = solve()  # warmup + report payload
+        t = time_fn(lambda: solve(), warmup=0, iters=2)
+        emit(f"lu_refine/n={n}_{factor_tier}-to-{target_tier}", t * 1e6,
+             f"iters={info.iterations};converged={info.converged};"
+             f"escalations={len(info.escalations)};"
+             f"berr={info.final_backward_error:.1e}")
+
+    # qd-direct full solve (factor + substitutions, no refinement): the
+    # ceiling the dd->qd row undercuts
+    a_qd = mp.from_float(np.asarray(a, np.float64), "qd")
+    b_qd = mp.from_float(np.asarray(b, np.float64), "qd")
+
+    def direct():
+        lu, piv = rgetrf(a_qd, block=16)
+        x = lu_solve(lu, piv, b_qd)
+        mp.limbs(x)[0].block_until_ready()
+
+    direct()
+    t = time_fn(direct, warmup=0, iters=2)
+    emit(f"lu_refine/n={n}_qd-direct", t * 1e6, "iters=0;converged=True")
+
+
+def run():
+    _fig8()
+    _refine_sweep()
+    dump_json("BENCH_LU.json", prefix="lu_")

@@ -56,3 +56,13 @@ def run():
     emit(f"sdp_tableV/{prob_q.name}/binary128plus", 0.0,
          f"gap12={rqd.relative_gap:.2e};full_depth=8.9e-28 at 63 iters "
          f"(tests/test_sdp.py)")
+    # the refinement ladder's cost receipt (DESIGN.md §10): Schur solves
+    # route through rposv — dd-factored, qd-refined, escalating only when
+    # cond(B) outgrows the dd rung
+    st = rqd.schur_stats or {}
+    facs = st.get("factorizations", {})
+    emit(f"sdp_schur/{prob_q.name}/refinement", 0.0,
+         f"solves={st.get('solves', 0)};"
+         f"refine_iters={st.get('iterations', 0)};"
+         f"escalations={st.get('escalations', 0)};"
+         f"dd_factors={facs.get('dd', 0)};qd_factors={facs.get('qd', 0)}")

@@ -33,7 +33,8 @@ from . import mp
 
 __all__ = ["GATES", "GATED_BACKENDS", "hilbert_f64",
            "hilbert_relative_error", "accuracy_report",
-           "write_accuracy_json", "max_rel_err"]
+           "write_accuracy_json", "max_rel_err",
+           "frac_matrix", "frac_matmul", "frac_sub", "frac_max_abs"]
 
 # per-tier observed-relative-error ceilings (the regression gate)
 GATES = {"dd": 2.0 ** -100, "qd": 2.0 ** -190}
@@ -75,6 +76,38 @@ def hilbert_tier(precision: str, n: int):
 
 def _frac(limbs_np, i: int, j: int) -> Fraction:
     return sum((Fraction(float(l[i, j])) for l in limbs_np), Fraction(0))
+
+
+# -- exact-rational matrix helpers (the LAPACK-grade residual gates) --------
+#
+# A multi-limb value is a finite sum of binary floats, hence an exact
+# rational; residuals like PA - LU measured over Fractions carry zero
+# measurement noise, so the test gates in tests/test_linalg_gates.py pin
+# the factorization's *own* backward error and nothing else.
+
+
+def frac_matrix(x):
+    """Exact rational entries of a 2-D multi-limb value."""
+    ls = [np.asarray(l, np.float64) for l in mp.limbs(x)]
+    m, n = ls[0].shape
+    return [[_frac(ls, i, j) for j in range(n)] for i in range(m)]
+
+
+def frac_matmul(fa, fb):
+    """Exact rational product of two Fraction matrices."""
+    inner = len(fb)
+    cols = len(fb[0])
+    return [[sum((fa[i][k] * fb[k][j] for k in range(inner)), Fraction(0))
+             for j in range(cols)] for i in range(len(fa))]
+
+
+def frac_sub(fa, fb):
+    return [[x - y for x, y in zip(ra, rb)] for ra, rb in zip(fa, fb)]
+
+
+def frac_max_abs(f) -> float:
+    """max |entry| of a Fraction matrix, rounded once to f64 at the end."""
+    return float(max(abs(e) for row in f for e in row))
 
 
 @functools.lru_cache(maxsize=8)

@@ -29,7 +29,7 @@ from repro.gemm import matmul
 
 from . import mp
 
-__all__ = ["rgemm", "rsyrk", "transpose", "identity"]
+__all__ = ["rgemm", "rsyrk", "transpose", "identity", "rlange"]
 
 
 def transpose(a):
@@ -40,6 +40,26 @@ def transpose(a):
 
 def identity(n: int, dtype=jnp.float64, precision: str = "dd"):
     return mp.from_float(jnp.eye(n, dtype=dtype), precision)
+
+
+def rlange(norm: str, a):
+    """Matrix norm of a multi-limb value (MPLAPACK's Rlange), as f64.
+
+    ``norm``: ``'m'`` max |a_ij|, ``'1'`` max column sum, ``'i'`` max row
+    sum (the infinity norm the refinement solver's backward-error metric
+    uses).  The row/column sums are accumulated in the value's own tier;
+    only the final scalar rounds to f64, so ill-scaled matrices do not
+    lose their small entries to f64 accumulation.  Traceable (returns a
+    jnp scalar), so the solver's convergence metrics stay inside one jit.
+    """
+    kind = norm.lower()
+    if kind == "m":
+        return mp.max_abs(a)
+    if kind not in ("1", "i", "inf"):
+        raise ValueError(f"unknown norm {norm!r}; one of 'm', '1', 'i'")
+    axis = -2 if kind == "1" else -1
+    sums = mp.sum_(mp.abs_(a), axis=axis)
+    return jnp.max(mp.limbs(sums)[0])
 
 
 def rgemm(transa: str, transb: str, alpha, a, b, beta,

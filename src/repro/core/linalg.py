@@ -25,7 +25,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import mp
 from .blas import rgemm
@@ -38,6 +37,7 @@ __all__ = [
     "lu_solve",
     "cholesky_solve",
     "apply_pivots",
+    "pivot_permutation",
 ]
 
 
@@ -149,43 +149,83 @@ def _trsm(t_limbs, b_limbs, *, lower: bool, unit_diag: bool,
     return out
 
 
-def rtrsm(t, b, *, lower: bool = True, unit_diag: bool = False,
-          transpose_a: bool = False):
+def rtrsm(t, b, *, side: str = "left", lower: bool = True,
+          unit_diag: bool = False, transpose_a: bool = False):
+    """Triangular solve: op(T) X = B (side='left') or X op(T) = B ('right').
+
+    The right-side form rides the left-side kernel through the transpose
+    identity  X op(T) = B  <=>  op(T)^T X^T = B^T  (so both sides share
+    one jitted substitution loop per limb count).
+    """
+    if side not in ("left", "right"):
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    if side == "right":
+        bt = mp.map_limbs(lambda l: jnp.swapaxes(l, -1, -2), b)
+        xt = rtrsm(t, bt, lower=lower, unit_diag=unit_diag,
+                   transpose_a=not transpose_a)
+        return mp.map_limbs(lambda l: jnp.swapaxes(l, -1, -2), xt)
     out = _trsm(tuple(mp.limbs(t)), tuple(mp.limbs(b)), lower=lower,
                 unit_diag=unit_diag, transpose_a=transpose_a)
     return mp.from_limbs(out)
 
 
-def apply_pivots(x, piv: np.ndarray, offset: int = 0):
-    """Apply LAPACK-style sequential row interchanges piv (local indices)."""
-    perm = np.arange(x.shape[0])
-    for j, p in enumerate(np.asarray(piv)):
-        pj = int(p) + offset
+def pivot_permutation(piv, m: int, offset: int = 0, *,
+                      inverse: bool = False):
+    """Row permutation equivalent to LAPACK's sequential interchanges.
+
+    ``piv`` is a (traced or concrete) JAX/NumPy int vector with piv[j] =
+    the row swapped with ``j + offset`` at step j.  Returns the gather
+    index ``perm`` such that ``x[perm]`` applies all nb interchanges in
+    order (``inverse=True`` plays them backwards, undoing the forward
+    application).  Pure ``lax`` control flow — jit/vmap traceable, so
+    pivoted solves can live inside one compiled refinement step.
+    """
+    piv = jnp.asarray(piv)
+    nb = piv.shape[0]
+
+    def swap(j, perm):
         jj = j + offset
-        perm[jj], perm[pj] = perm[pj], perm[jj]
-    idx = jnp.asarray(perm)
-    return mp.map_limbs(lambda l: l[idx], x)
+        pj = piv[j].astype(perm.dtype) + offset
+        vj, vp = perm[jj], perm[pj]
+        return perm.at[jj].set(vp).at[pj].set(vj)
+
+    body = (lambda k, p: swap(nb - 1 - k, p)) if inverse else swap
+    return jax.lax.fori_loop(0, nb, body, jnp.arange(m, dtype=jnp.int32))
+
+
+def apply_pivots(x, piv, offset: int = 0, *, inverse: bool = False):
+    """Apply LAPACK-style sequential row interchanges piv (local indices).
+
+    Traceable end-to-end: ``piv`` may be a concrete NumPy vector (legacy
+    callers) or a traced JAX array (the jitted refinement loop).
+    ``inverse=True`` undoes a forward application — the round-trip
+    ``apply_pivots(apply_pivots(x, piv), piv, inverse=True) == x`` is
+    property-tested.
+    """
+    perm = pivot_permutation(piv, x.shape[0], offset, inverse=inverse)
+    return mp.map_limbs(lambda l: l[perm], x)
 
 
 def rgetrf(a, block: int = 64, plan=None, **plan_overrides):
     """Blocked LU with partial pivoting (paper's Rgetrf, steps 1-6).
 
     Returns (lu, piv) with L\\U packed and piv the global LAPACK-style
-    interchange vector.  The trailing updates go through the engine-planned
-    ``rgemm``: each shrinking (m-p, nb, n-p) update shape is planned per
-    call, so tuned block entries from the autotune cache (bucketed by shape
-    and limb count) are reused across the sweep instead of DEFAULT_BLOCKS.
+    interchange vector — a JAX int array end-to-end (no host round-trip),
+    so downstream pivoted solves stay jit-traceable.  The trailing updates
+    go through the engine-planned ``rgemm``: each shrinking (m-p, nb, n-p)
+    update shape is planned per call, so tuned block entries from the
+    autotune cache (bucketed by shape and limb count) are reused across
+    the sweep instead of DEFAULT_BLOCKS.
     """
     m, n = a.shape
     assert m == n, "square only (paper's setting)"
     lu = a
-    piv_global = np.zeros(n, dtype=np.int64)
+    piv_parts = []
     for p0 in range(0, n, block):
         nb = min(block, n - p0)
         panel = mp.map_limbs(lambda l: l[p0:, p0:p0 + nb], lu)
         panel_lu, ppiv = rgetrf2(panel)
-        ppiv = np.asarray(ppiv)
-        piv_global[p0:p0 + nb] = ppiv + p0
+        piv_parts.append(ppiv + p0)
         # apply the panel's row swaps to the columns outside the panel
         rest = mp.map_limbs(lambda l: l[p0:, :], lu)
         rest = apply_pivots(rest, ppiv)
@@ -214,17 +254,16 @@ def rgetrf(a, block: int = 64, plan=None, **plan_overrides):
                 ll.at[p0 + nb:, p0 + nb:].set(ul)
                 for ll, ul in zip(mp.limbs(lu), mp.limbs(upd))
             ])
-    return lu, piv_global
+    return lu, jnp.concatenate(piv_parts)
 
 
-def lu_solve(lu, piv: np.ndarray, b):
-    """Solve A x = b given rgetrf output (forward + backward substitution)."""
-    n = lu.shape[0]
-    perm = np.arange(n)
-    for j, p in enumerate(np.asarray(piv)):
-        perm[j], perm[p] = perm[p], perm[j]
-    idx = jnp.asarray(perm)
-    pb = mp.map_limbs(lambda l: l[idx], b)
+def lu_solve(lu, piv, b):
+    """Solve A x = b given rgetrf output (forward + backward substitution).
+
+    Fully traceable — ``piv`` may be a traced JAX vector, so a refinement
+    loop can keep the whole correction solve inside one jit.
+    """
+    pb = apply_pivots(b, piv)
     y = rtrsm(lu, pb, lower=True, unit_diag=True)
     return rtrsm(lu, y, lower=False, unit_diag=False)
 

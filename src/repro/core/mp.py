@@ -30,8 +30,8 @@ from . import dd, qd
 __all__ = [
     "PRECISIONS", "nlimbs", "precision_of", "limbs", "from_limbs",
     "map_limbs", "from_float", "zeros", "to_float", "promote",
-    "add", "sub", "neg", "mul", "mul_float", "div", "sqrt",
-    "where", "sum_", "dot", "broadcast_to", "eps",
+    "add", "sub", "neg", "abs_", "mul", "mul_float", "div", "sqrt",
+    "where", "sum_", "dot", "broadcast_to", "eps", "max_abs",
 ]
 
 PRECISIONS = {"dd": 2, "qd": 4}
@@ -122,6 +122,20 @@ def sub(a, b):
 
 def neg(a):
     return _mod(a).neg(a)
+
+
+def abs_(a):
+    return _mod(a).abs_(a)
+
+
+def max_abs(a):
+    """max |a| as an f64 scalar (the Rlange 'M' norm), traceable.
+
+    The leading limb alone decides the magnitude ordering of a normalized
+    expansion, and the lower limbs sit below its ulp — so the f64 value of
+    the max-|entry| is exactly the max of |hi|.
+    """
+    return jnp.max(jnp.abs(limbs(a)[0]))
 
 
 def mul(a, b):

@@ -23,8 +23,9 @@ import jax.numpy as jnp
 from .efts import quick_two_sum, two_prod_terms, two_sum
 
 __all__ = ["QD", "from_float", "from_dd", "to_float", "to_dd", "zeros",
-           "add", "sub", "mul", "mul_float", "mul_pow2", "neg", "fma",
-           "div", "sqrt", "where", "sum_", "dot", "eps", "renorm_list"]
+           "add", "sub", "mul", "mul_float", "mul_pow2", "neg", "abs_",
+           "fma", "div", "sqrt", "where", "sum_", "dot", "eps",
+           "renorm_list"]
 
 
 class QD(NamedTuple):
@@ -86,6 +87,12 @@ def zeros(shape, dtype=jnp.float64) -> QD:
 
 def neg(q: QD) -> QD:
     return QD(-q.x0, -q.x1, -q.x2, -q.x3)
+
+
+def abs_(q: QD) -> QD:
+    # the leading limb carries the sign of the whole expansion
+    m = q.x0 < 0
+    return QD(*[jnp.where(m, -l, l) for l in q.limbs()])
 
 
 def where(c, a: QD, b: QD) -> QD:

@@ -44,6 +44,7 @@ Ozaki scheme and documented in DESIGN.md.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List
 
 import jax
@@ -170,6 +171,12 @@ class _MLOps:
     """Shared multi-limb ops backend; subclasses fix the tier module."""
 
     mod = dd  # overridden
+    # Schur solves factor at this rung and refine at the tier's own
+    # precision (repro.solve rgesv/rposv): dd is the cheapest rung whose
+    # factorization survives mid-path Schur conditioning, and the
+    # escalation ladder re-factors at the tier itself when cond(B) ~
+    # 1/mu^2 outgrows the rung near the optimum
+    schur_factor_tier = "dd"
 
     def __init__(self, plan_overrides: dict | None = None):
         # planner overrides, not a hand-threaded backend string: the engine
@@ -178,6 +185,10 @@ class _MLOps:
         # An explicit {} means "no pins": full auto planning.
         self.plan_overrides = dict(plan_overrides) if plan_overrides is not None \
             else {"backend": "xla"}
+        # aggregate refinement telemetry across every Schur solve of one
+        # PDIPM run (surfaced as SDPResult.schur_stats)
+        self.schur_stats = {"solves": 0, "iterations": 0, "escalations": 0,
+                            "factorizations": {}}
 
     def wrap(self, a_np):
         return self.mod.from_float(jnp.asarray(a_np, jnp.float64))
@@ -210,9 +221,42 @@ class _MLOps:
         return cholesky_solve(l, b)
 
     def solve_spd(self, bmat, rhs):
-        l = rpotrf(bmat)
-        sol = cholesky_solve(l, mp.map_limbs(lambda x: x[:, None], rhs))
-        return mp.map_limbs(lambda x: x[:, 0], sol)
+        # the Schur system B dy = rhs through the tiered refinement solver:
+        # factor once at the cheap rung, refine residuals at this tier's
+        # precision through the engine, escalate on stagnation.  For the
+        # qd tier this is the paper's application story — binary128+
+        # accuracy at (mostly) binary128 factorization cost.
+        from repro.solve import rposv
+
+        dy, info = rposv(bmat, rhs, factor_tier=self.schur_factor_tier,
+                         target_tier=mp.precision_of(bmat), max_iters=12,
+                         **self.plan_overrides)
+        st = self.schur_stats
+        st["solves"] += 1
+        st["iterations"] += info.iterations
+        st["escalations"] += len(info.escalations)
+        for tier, cnt in info.factorizations.items():
+            st["factorizations"][tier] = \
+                st["factorizations"].get(tier, 0) + cnt
+        last_measured = info.backward_errors[-1] \
+            if info.backward_errors else float("nan")
+        topped_out = bool(info.factor_tiers) and \
+            info.factor_tiers[-1] == info.target_tier
+        if not info.converged and topped_out \
+                and not math.isfinite(last_measured) \
+                and not info.final_backward_error < 0.5:
+            # the ladder topped out with a broken factorization (NaN
+            # residual at the target rung itself) AND no meaningfully
+            # refined direction exists (the best finite iterate is the
+            # ~trivial one, berr ~ 1): preserve the direct solve's
+            # failure signal — the PDIPM loop breaks on NaN at its
+            # precision floor rather than iterating on a frozen
+            # direction.  A NaN on a lower rung, or a target-rung
+            # divergence AFTER a usable iterate was found, is not
+            # terminal: _refine already fell back to its best finite
+            # iterate and that direction is returned
+            return mp.map_limbs(lambda x: jnp.full_like(x, jnp.nan), dy)
+        return dy
 
     def t(self, a):
         return transpose(a)
@@ -298,6 +342,11 @@ class SDPResult:
     dual_obj: float
     converged: bool
     history: list
+    # aggregate refinement telemetry of the Schur solves (multi-limb
+    # precisions only): solves / refine iterations / escalations and the
+    # per-rung factorization counts — the "factored cheap, refined at
+    # target" cost story in numbers
+    schur_stats: dict | None = None
 
 
 def random_sdp(n: int, m: int, seed: int = 0, rank: int | None = None,
@@ -509,6 +558,7 @@ def solve_sdp(prob: SDPProblem, *, precision: str = "binary128",
         relative_gap=float(gap), p_feas_err=float(pfeas),
         d_feas_err=float(dfeas), primal_obj=pobj, dual_obj=dobj,
         converged=bool(gap < tol_gap), history=history,
+        schur_stats=getattr(ops, "schur_stats", None),
     )
 
 

@@ -20,15 +20,16 @@ tier tunes its own tiles.  See DESIGN.md §4 (flow), §8 (precision
 ladder), and §9 (MXU-resident Ozaki slicing).
 """
 
-from .plan import BACKENDS, PRECISIONS, GemmPlan, make_plan, resolve_backend
+from .plan import BACKENDS, PRECISIONS, GemmPlan, make_plan, \
+    replan_precision, resolve_backend
 from .engine import execute, matmul
 from .autotune import autotune, candidate_blocks, vmem_bytes
 from .cache import PlanCache, cache_key, default_cache, set_default_cache, \
     shape_bucket
 
 __all__ = [
-    "BACKENDS", "PRECISIONS", "GemmPlan", "make_plan", "resolve_backend",
-    "execute", "matmul",
+    "BACKENDS", "PRECISIONS", "GemmPlan", "make_plan", "replan_precision",
+    "resolve_backend", "execute", "matmul",
     "autotune", "candidate_blocks", "vmem_bytes",
     "PlanCache", "cache_key", "default_cache", "set_default_cache",
     "shape_bucket",

@@ -219,19 +219,23 @@ def _execute_batched(plan: GemmPlan, a, b):
 # jit wrappers keyed on the (frozen, hashable) plan: without these, every
 # eager call re-traces the backend's scan/vmap/pallas graph — at the qd
 # tier that retrace is thousands of ops and dominates wall time (observed
-# in the SDP inner loop).  The mesh field is excluded from plan
+# in the SDP inner loop).  The alpha/beta/c epilogue operands ride inside
+# the same jit (None is an empty pytree, so epilogue-free calls compile
+# their own specialization): an eager post-step epilogue at the qd tier is
+# hundreds of per-limb ops per call, which dominated the refinement
+# solver's residual r = b - A x.  The mesh field is excluded from plan
 # equality/hash, so only the mesh-free paths go through here; sharded
 # execution compiles inside shard_map as before.
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
-def _execute_2d_jit(a, b, *, plan: GemmPlan):
-    return _execute_2d(plan, a, b)
+def _execute_2d_jit(a, b, alpha, beta, c, *, plan: GemmPlan):
+    return _apply_epilogue(_execute_2d(plan, a, b), alpha, beta, c)
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
-def _execute_batched_jit(a, b, *, plan: GemmPlan):
-    return _execute_batched(plan, a, b)
+def _execute_batched_jit(a, b, alpha, beta, c, *, plan: GemmPlan):
+    return _apply_epilogue(_execute_batched(plan, a, b), alpha, beta, c)
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
@@ -265,6 +269,13 @@ def _apply_epilogue(out, alpha, beta, c):
     if c is not None:
         out = mp.add(out, mp.mul(mp.broadcast_to(beta, c.shape), c))
     return out
+
+
+# pure pytree arithmetic — jittable without the plan key, so the sharded
+# path (whose shard_map compiles outside the plan-keyed wrappers because
+# plan equality/hash excludes the mesh) still gets a compiled epilogue
+# instead of hundreds of eager per-limb ops per call
+_apply_epilogue_jit = jax.jit(_apply_epilogue)
 
 
 # --------------------------------------------------------------------------
@@ -347,16 +358,18 @@ def execute(plan: GemmPlan, a, b, *, alpha=None, beta=None, c=None):
             raise ValueError(
                 "plan was made for 2-D operands but inputs have batch dims; "
                 "rebuild with batch_shape= (engine.matmul does this)")
-        return _apply_epilogue(_execute_batched_jit(a, b, plan=plan),
-                               alpha, beta, c)
+        return _execute_batched_jit(a, b, alpha, beta, c, plan=plan)
     if plan.mesh is not None and plan.shard_axis is not None:
-        return _apply_epilogue(_execute_sharded(plan, a, b), alpha, beta, c)
+        out = _execute_sharded(plan, a, b)
+        if alpha is None and c is None:
+            return out
+        return _apply_epilogue_jit(out, alpha, beta, c)
     if alpha is not None and plan.backend == "ozaki-pallas":
         # fused drain: the epilogue runs in VMEM before the C' tile drains
         if c is None:
             return _execute_fused_alpha_jit(a, b, alpha, plan=plan)
         return _execute_fused_full_jit(a, b, alpha, beta, c, plan=plan)
-    return _apply_epilogue(_execute_2d_jit(a, b, plan=plan), alpha, beta, c)
+    return _execute_2d_jit(a, b, alpha, beta, c, plan=plan)
 
 
 def matmul(a, b, *, plan: Optional[GemmPlan] = None, alpha=None, beta=None,

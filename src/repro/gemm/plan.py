@@ -30,8 +30,9 @@ from repro.core.mp import PRECISIONS
 
 from . import cache as plan_cache
 
-__all__ = ["GemmPlan", "make_plan", "resolve_backend", "round_up",
-           "BACKENDS", "PRECISIONS", "DEFAULT_BLOCKS", "OZAKI_TARGET_BITS"]
+__all__ = ["GemmPlan", "make_plan", "replan_precision", "resolve_backend",
+           "round_up", "BACKENDS", "PRECISIONS", "DEFAULT_BLOCKS",
+           "OZAKI_TARGET_BITS"]
 
 BACKENDS = ("auto", "pallas", "ozaki", "ozaki-pallas", "xla", "ref")
 
@@ -225,3 +226,29 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
         n_slices=n_slices, slice_beta=slice_beta,
         target_bits=target_bits, full=full,
         source=source, **blocks)
+
+
+def replan_precision(plan: GemmPlan, m: int, k: int, n: int,
+                     precision: str) -> GemmPlan:
+    """Re-plan the same workload at another precision tier.
+
+    The tier-escalating refinement solver climbs the ladder mid-solve
+    (f64 -> dd -> qd); structural choices (backend, platform, mesh, batch
+    shape) carry over, but everything tier-dependent is *re-solved* rather
+    than copied — block shapes consult the new limb count's tuned-cache
+    rows, and the Ozaki slice parameters re-run their exactness fixpoint
+    for the new target_bits (a dd-tuned n_slices would under-cover qd by
+    ~100 bits).  ``plan.with_(precision=...)`` must not exist for exactly
+    that reason.  The shape is an argument because a plan does not record
+    it (the paper's synthesized design is shape-free; so is ours).
+    """
+    if plan.precision == precision:
+        return plan
+    backend = plan.backend
+    if backend == "ozaki" and precision == "qd":
+        backend = "xla"  # the whole-K slicing path has no qd tier
+    return make_plan(
+        m, k, n, dtype=plan.limb_dtype, precision=precision,
+        backend=backend, batch_shape=plan.batch_shape,
+        interpret=plan.interpret, platform=plan.platform,
+        mesh=plan.mesh, shard_axis=plan.shard_axis)

@@ -1,0 +1,24 @@
+"""Tiered iterative-refinement solver subsystem (DESIGN.md §10).
+
+``rgesv`` (general) / ``rposv`` (SPD) factor once at a cheap ladder rung,
+refine GEMM-rich residuals at the target tier through the engine, and
+escalate f64 -> dd -> qd automatically when the residual stagnates.
+``lu_solve_refined`` / ``cholesky_solve_refined`` bolt the same loop onto
+an existing ``rgetrf`` / ``rpotrf`` factorization.
+"""
+
+from .refine import (
+    LADDER_CELLS,
+    TIERS,
+    RefinementInfo,
+    cholesky_solve_refined,
+    lu_solve_refined,
+    rgesv,
+    rposv,
+    tier_eps,
+)
+
+__all__ = [
+    "TIERS", "LADDER_CELLS", "RefinementInfo", "rgesv", "rposv",
+    "lu_solve_refined", "cholesky_solve_refined", "tier_eps",
+]

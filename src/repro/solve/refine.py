@@ -1,0 +1,450 @@
+"""Tiered iterative-refinement linear solvers (the paper's application layer).
+
+The paper's headline applications — LU decomposition and SDP — need
+binary128 only to *stabilize* a solve, not to carry every flop.  That is
+the classic mixed-precision iterative-refinement setting: factor A once at
+a cheap tier, then recover target-tier accuracy from GEMM-rich residual
+corrections,
+
+    factor   P A = L U            at  u_factor   (f64, dd, or qd)
+    repeat   r = b - A x          at  u_target   (one engine ``execute``)
+             d = U \\ (L \\ P r)    at  u_factor
+             x = x + d            at  u_target
+
+which converges at rate ~ cond(A) * u_factor per step as long as
+cond(A) < 1/u_factor.  When it does not — the residual stagnates — the
+solver *escalates* the factorization tier up the ladder f64 -> dd -> qd
+and keeps going, so one entry point serves the whole precision range and
+only ill-conditioned solves pay for the expensive rungs (DESIGN.md §10
+has the cost model).
+
+The residual is a single engine call per iteration: ``execute(plan, A, x,
+alpha=-1, beta=1, c=b)`` rides the fused alpha/beta epilogue, the batched
+(vmap) multi-RHS path, and mesh row-sharding exactly like every other
+GEMM in the repo.  Everything per-iteration is jit-compiled once per
+(plan, tier) — pivots are traced JAX arrays end-to-end, so the pivoted
+correction solve lives inside the same jit as the update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+import numpy as np
+
+from repro.core import mp
+from repro.core.blas import rlange
+from repro.core.linalg import (
+    cholesky_solve,
+    lu_solve,
+    rgetrf,
+    rpotrf,
+)
+from repro.gemm import execute, make_plan, replan_precision
+
+__all__ = ["TIERS", "LADDER_CELLS", "RefinementInfo", "rgesv", "rposv",
+           "lu_solve_refined", "cholesky_solve_refined", "tier_eps"]
+
+# the escalation ladder, cheapest first
+TIERS = ("f64", "dd", "qd")
+
+# every meaningful (factor_tier, target_tier) pair: factor at or below
+# the target, target always an extended tier.  The single source for the
+# conformance matrix, the solver test sweep, and the bench_lu cost rows —
+# a new rung lands in all three automatically.
+LADDER_CELLS = tuple(
+    (f, t) for t in TIERS if t != "f64"
+    for f in TIERS if TIERS.index(f) <= TIERS.index(t))
+
+_TIER_ALIASES = {
+    "f64": "f64", "double": "f64", "float64": "f64",
+    "dd": "dd", "binary128": "dd", "dd64": "dd",
+    "qd": "qd", "binary128+": "qd", "qd64": "qd",
+}
+
+# trace log for the compile-once regression test: one entry is appended
+# per *trace* of a refinement-step jit (tracing runs this Python body;
+# cached executions do not), keyed by what the jit specializes on
+_TRACE_EVENTS: List[tuple] = []
+
+
+def _tier(name: str) -> str:
+    try:
+        return _TIER_ALIASES[name]
+    except KeyError:
+        raise ValueError(f"unknown tier {name!r}; one of {sorted(set(_TIER_ALIASES))}")
+
+
+def tier_eps(tier: str) -> float:
+    """Unit roundoff of a ladder rung (f64 included)."""
+    t = _tier(tier)
+    return 2.0 ** -53 if t == "f64" else mp.eps(t)
+
+
+def _is_ml(x) -> bool:
+    try:
+        mp.precision_of(x)
+        return True
+    except TypeError:
+        return False
+
+
+def _as_tier(x, tier: str):
+    """Coerce an f64 array / dd / qd value to a ladder rung.
+
+    Climbing (f64 -> dd -> qd) is exact (zero-limb padding); descending
+    rounds to the cheaper tier — exactly what handing a residual to a
+    cheap factorization wants.
+    """
+    t = _tier(tier)
+    if _is_ml(x):
+        return jnp.asarray(mp.to_float(x)) if t == "f64" else mp.promote(x, t)
+    x = jnp.asarray(x, jnp.float64)
+    return x if t == "f64" else mp.from_float(x, t)
+
+
+# --------------------------------------------------------------------------
+# factorizations (one per ladder rung, built lazily on escalation)
+# --------------------------------------------------------------------------
+
+
+@jax.jit
+def _lu_factor_f64(a64):
+    return jsl.lu_factor(a64)
+
+
+@jax.jit
+def _chol_factor_f64(a64):
+    return jnp.linalg.cholesky(a64)
+
+
+def _factorize(a_target, tier: str, assume: str, block: int):
+    """Factor A (held at the target tier) at a ladder rung."""
+    a_f = _as_tier(a_target, tier)
+    if tier == "f64":
+        return _chol_factor_f64(a_f) if assume == "pos" \
+            else _lu_factor_f64(a_f)
+    if assume == "pos":
+        return rpotrf(a_f)
+    return rgetrf(a_f, block=block)
+
+
+def _fsolve(fac, tier: str, assume: str, rhs):
+    """Solve with a rung's factorization; rhs and result live at that rung.
+
+    rhs is (n, ncols) — batched systems are flattened to columns by the
+    caller (triangular substitution is column-independent).
+    """
+    if tier == "f64":
+        if assume == "pos":
+            y = jsl.solve_triangular(fac, rhs, lower=True)
+            return jsl.solve_triangular(fac.T, y, lower=False)
+        return jsl.lu_solve(fac, rhs)
+    if assume == "pos":
+        return cholesky_solve(fac, rhs)
+    lu, piv = fac
+    return lu_solve(lu, piv, rhs)
+
+
+# --------------------------------------------------------------------------
+# jitted refinement steps (compiled once per plan / tier combination)
+# --------------------------------------------------------------------------
+
+
+def _cols(x, n: int):
+    """(..., n, nrhs) -> (n, batch*nrhs) column view (and its inverse)."""
+    return mp.map_limbs(
+        lambda l: jnp.moveaxis(l, -2, 0).reshape(n, -1), x)
+
+
+def _uncols(x2d, like):
+    shp = mp.limbs(like)[0].shape
+    return mp.map_limbs(
+        lambda l: jnp.moveaxis(l.reshape(shp[-2:-1] + shp[:-2] + shp[-1:]),
+                               0, -2), x2d)
+
+
+@jax.jit
+def _col_max(x):
+    """Per-column max |entry| (shape (..., nrhs)) of a multi-limb value.
+
+    The leading limb decides magnitude ordering of a normalized
+    expansion, so the f64 column maxes are exact to f64 resolution.
+    """
+    return jnp.max(jnp.abs(mp.limbs(x)[0]), axis=-2)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _residual_step(a_t, b_t, x, *, plan):
+    """r = b - A x at the target tier — one engine call, fused epilogue.
+
+    Returns (r, per-column |r|_max, per-column |x|_max); the norms ride
+    the same jit so the convergence metric costs no extra eager
+    multi-limb passes.  Column-wise (LAPACK xGERFS-style) because a
+    global max would let one large-scale RHS column mask another column
+    still far from its own backward-error target.
+    """
+    _TRACE_EVENTS.append(("residual", plan.precision, plan.backend,
+                          plan.batch_shape))
+    r = execute(plan, a_t, x, alpha=-1.0, beta=1.0, c=b_t)
+    return r, _col_max(r), _col_max(x)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("factor_tier", "target_tier", "assume"))
+def _correct_step(fac, r, x, *, factor_tier, target_tier, assume):
+    """x + A^-1 r through the rung factorization, update at target tier."""
+    _TRACE_EVENTS.append(("correct", factor_tier, target_tier, assume))
+    n = x.shape[-2]
+    r_f = _as_tier(_cols(r, n), factor_tier)
+    d_f = _fsolve(fac, factor_tier, assume, r_f)
+    d = _uncols(_as_tier(d_f, target_tier), r)
+    return mp.add(x, d)
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RefinementInfo:
+    """Convergence report of one refinement-backed solve."""
+
+    converged: bool
+    iterations: int
+    target_tier: str
+    tol: float
+    backward_errors: List[float]          # berr of the iterate per iteration
+    factor_tiers: List[str]               # rung in effect at each iteration
+    escalations: List[dict]               # {iteration, from, to, ratio}
+    factorizations: dict                  # rung -> count performed
+    stagnations: int = 0
+    # backward error of the RETURNED x.  Usually backward_errors[-1], but
+    # when a diverged/NaN final step makes the solver fall back to the
+    # best measured iterate, this is that iterate's berr — the history
+    # stays an honest per-iteration log of what was measured
+    final_backward_error: float = float("inf")
+
+
+def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
+            max_iters, tol, stagnation_ratio, block, plan, plan_overrides):
+    factor_tier = _tier(factor_tier)
+    if target_tier is None:
+        target_tier = mp.precision_of(a) if _is_ml(a) else "dd"
+    target_tier = _tier(target_tier)
+    if target_tier == "f64":
+        raise ValueError("target_tier must be an extended tier (dd or qd); "
+                         "a plain f64 solve needs no refinement subsystem")
+    if TIERS.index(factor_tier) > TIERS.index(target_tier):
+        raise ValueError(f"factor_tier {factor_tier!r} is above "
+                         f"target_tier {target_tier!r} on the ladder")
+
+    a_t = _as_tier(a, target_tier)
+    vector_rhs = (jnp.ndim(b) if not _is_ml(b) else len(b.shape)) == 1
+    b_t = _as_tier(b, target_tier)
+    if vector_rhs:
+        b_t = mp.map_limbs(lambda l: l[:, None], b_t)
+    n = a_t.shape[-1]
+    nrhs = b_t.shape[-1]
+    batch_shape = tuple(b_t.shape[:-2])
+
+    if plan is not None and plan_overrides:
+        raise ValueError("pass either plan= or planner overrides, not both")
+    if plan is None:
+        plan = make_plan(n, n, nrhs, dtype=mp.limbs(a_t)[0].dtype,
+                         precision=target_tier, batch_shape=batch_shape,
+                         **plan_overrides)
+    elif plan.precision != target_tier:
+        plan = replan_precision(plan, n, n, nrhs, target_tier)
+
+    if tol is None:
+        tol = 2.0 * n * tier_eps(target_tier)
+
+    anorm = float(rlange("i", a_t))
+    bmax = np.asarray(_col_max(b_t), np.float64)  # per (batch, column)
+
+    facs: dict = {}
+    fac_counts = {t: 0 for t in TIERS}
+    if factorization is not None:
+        facs[factor_tier] = factorization
+    eager = plan.mesh is not None  # shard_map path: engine jits internally
+
+    def get_fac(tier):
+        if tier not in facs:
+            facs[tier] = _factorize(a_t, tier, assume, block)
+            fac_counts[tier] += 1
+        return facs[tier]
+
+    x = mp.zeros(b_t.shape, target_tier, dtype=mp.limbs(b_t)[0].dtype)
+    history: List[float] = []
+    tiers_hist: List[str] = []
+    escalations: List[dict] = []
+    stagnations = 0
+    converged = False
+    prev_berr = None
+    best: Optional[Tuple[float, Any]] = None
+    it = 0
+    x_measured = True  # x=0 is trivially known; corrections unmeasure x
+
+    def measure(x):
+        if eager:
+            r = execute(plan, a_t, x, alpha=-1.0, beta=1.0, c=b_t)
+            rmax, xmax = _col_max(r), _col_max(x)
+        else:
+            r, rmax, xmax = _residual_step(a_t, b_t, x, plan=plan)
+        # the LAPACK per-column backward error, worst column governs:
+        # stopping on a global max would declare a small-scale column
+        # converged on the strength of a large-scale one
+        rmax = np.asarray(rmax, np.float64)
+        denom = anorm * np.asarray(xmax, np.float64) + bmax
+        with np.errstate(divide="ignore", invalid="ignore"):
+            cells = np.where(denom > 0, rmax / denom,
+                             np.where(rmax == 0, 0.0, np.inf))
+        return r, float(np.max(cells))
+
+    while it < max_iters:
+        it += 1
+        r, berr = measure(x)
+        x_measured = True
+        history.append(berr)
+        tiers_hist.append(factor_tier)
+        finite = math.isfinite(berr)
+        if finite and (best is None or berr < best[0]):
+            best = (berr, x)
+        if finite and berr <= tol:
+            converged = True
+            break
+        if (not finite) or (prev_berr is not None
+                            and berr > stagnation_ratio * prev_berr):
+            # stagnation: this rung's factorization can no longer cut the
+            # backward error (cond(A) * u_factor ~ 1).  A non-finite berr
+            # is the hard form of the same failure — the rung's
+            # factorization broke down outright (e.g. a dd Cholesky of a
+            # cond >> 1/u_dd Schur complement goes indefinite under
+            # rounding and NaNs).
+            stagnations += 1
+            nxt = TIERS.index(factor_tier) + 1
+            # escalate only while an iteration remains to act on it — an
+            # escalation recorded with no capacity to correct would
+            # overcount the telemetry vs factorizations actually done
+            if nxt <= TIERS.index(target_tier) and it < max_iters:
+                escalations.append({
+                    "iteration": it, "from": factor_tier,
+                    "to": TIERS[nxt],
+                    "ratio": berr / prev_berr
+                    if (finite and prev_berr) else float("inf"),
+                })
+                factor_tier = TIERS[nxt]
+                if not finite:
+                    # the iterate (and its residual) are poisoned: restart
+                    # from the best finite iterate and re-measure
+                    x = best[1] if best is not None else mp.zeros(
+                        b_t.shape, target_tier,
+                        dtype=mp.limbs(b_t)[0].dtype)
+                    prev_berr = None
+                    continue
+                # finite stagnation: r is still valid — reuse it with the
+                # new rung's correction
+            else:
+                break  # at the ladder top for this target: genuine floor
+        x = _correct_step(get_fac(factor_tier), r, x,
+                          factor_tier=factor_tier, target_tier=target_tier,
+                          assume=assume)
+        x_measured = False
+        prev_berr = berr
+
+    if x_measured:
+        final_berr = history[-1] if history else float("inf")
+    else:
+        # max_iters exhausted right after a correction: the final iterate
+        # was never measured (it could even be NaN from a broken rung) —
+        # measure it once so final_backward_error describes the RETURNED x
+        _, final_berr = measure(x)
+    if best is not None and not (final_berr <= best[0]):
+        x = best[1]  # a diverged last step never worsens the returned x
+        final_berr = best[0]
+    if vector_rhs:
+        x = mp.map_limbs(lambda l: l[..., 0], x)
+    info = RefinementInfo(
+        converged=converged, iterations=it, target_tier=target_tier,
+        tol=float(tol), backward_errors=history, factor_tiers=tiers_hist,
+        escalations=escalations,
+        factorizations={t: c for t, c in fac_counts.items() if c},
+        stagnations=stagnations, final_backward_error=final_berr,
+    )
+    return x, info
+
+
+def rgesv(a, b, *, factor_tier: str = "f64",
+          target_tier: Optional[str] = None, assume: str = "gen",
+          max_iters: int = 40, tol: Optional[float] = None,
+          stagnation_ratio: float = 0.25, block: int = 32,
+          plan=None, **plan_overrides):
+    """Solve A x = b by factor-cheap / refine-at-target iteration.
+
+    ``a``: (n, n) — an f64 array or a dd/qd value; ``b``: (n,), (n, nrhs),
+    or batched (..., n, nrhs) (the residual GEMM rides the engine's
+    vmapped path; a ``mesh=`` override row-shards it).  The system is
+    factored once at ``factor_tier`` (f64 | dd | qd); each iteration
+    computes r = b - A x at ``target_tier`` (default: the tier of ``a``,
+    or dd for plain arrays) as ONE engine call and back-substitutes the
+    correction through the cheap factorization.  When a step fails to cut
+    the per-column backward error ‖r‖ / (‖A‖·‖x‖ + ‖b‖) below
+    ``stagnation_ratio`` (default 0.25) of the previous one, the
+    factorization escalates one rung (f64 -> dd -> qd, capped at the
+    target tier) and refinement continues; at the ladder top it stops at
+    the tier's genuine floor.
+
+    ``assume="pos"`` factors via Cholesky (the SDP Schur solve's path).
+    Returns ``(x, info)`` with ``x`` at the target tier and ``info`` a
+    :class:`RefinementInfo` (per-iteration backward errors, rungs,
+    escalations, factorization counts).
+    """
+    if assume not in ("gen", "pos"):
+        raise ValueError(f"assume must be 'gen' or 'pos', got {assume!r}")
+    return _refine(a, b, factor_tier=factor_tier, target_tier=target_tier,
+                   assume=assume, factorization=None, max_iters=max_iters,
+                   tol=tol, stagnation_ratio=stagnation_ratio, block=block,
+                   plan=plan, plan_overrides=plan_overrides)
+
+
+def rposv(a, b, **kwargs):
+    """SPD convenience wrapper: ``rgesv(..., assume="pos")``."""
+    kwargs.setdefault("assume", "pos")
+    return rgesv(a, b, **kwargs)
+
+
+def lu_solve_refined(a, lu, piv, b, *, target_tier: Optional[str] = None,
+                     max_iters: int = 40, tol: Optional[float] = None,
+                     stagnation_ratio: float = 0.25, block: int = 32,
+                     plan=None, **plan_overrides):
+    """Refinement-backed ``lu_solve``: reuse an existing ``rgetrf`` output.
+
+    The factorization's own tier (inferred from ``lu``) is the starting
+    rung; escalation past it re-factors ``a`` as usual.  ``a`` must be the
+    matrix that was factored.
+    """
+    return _refine(a, b, factor_tier=mp.precision_of(lu),
+                   target_tier=target_tier, assume="gen",
+                   factorization=(lu, piv), max_iters=max_iters, tol=tol,
+                   stagnation_ratio=stagnation_ratio, block=block,
+                   plan=plan, plan_overrides=plan_overrides)
+
+
+def cholesky_solve_refined(a, l, b, *, target_tier: Optional[str] = None,
+                           max_iters: int = 40, tol: Optional[float] = None,
+                           stagnation_ratio: float = 0.25, block: int = 32,
+                           plan=None, **plan_overrides):
+    """Refinement-backed ``cholesky_solve``: reuse an ``rpotrf`` factor."""
+    return _refine(a, b, factor_tier=mp.precision_of(l),
+                   target_tier=target_tier, assume="pos",
+                   factorization=l, max_iters=max_iters, tol=tol,
+                   stagnation_ratio=stagnation_ratio, block=block,
+                   plan=plan, plan_overrides=plan_overrides)

@@ -6,11 +6,19 @@ bounds.  Shapes include non-square and odd-K cases, so padding/clamping
 in the engine is exercised at both limb counts; the alpha/beta cells run
 the full Rgemm epilogue with non-representable tier scalars (1/3, -1/7).
 
+The solver axis extends the same discipline to ``repro.solve``: every
+(factor_tier x target_tier) rung combination, on the plain, batched and
+row-sharded multi-RHS paths, is conformance-checked against a qd-direct
+oracle (full qd ``rgetrf`` + ``lu_solve`` — the most accurate solve the
+repo can produce), plus refinement-convergence invariants (monotone
+non-increasing backward error; escalation exactly on stagnation).
+
 This is the test CI's ``conformance`` job runs on CPU interpret mode —
 every cell of the support matrix must agree with its oracle before a
 backend/tier combination is considered live.
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -19,7 +27,9 @@ from repro import gemm
 from repro.core import mp
 from repro.core.accuracy import max_rel_err as _rel_err
 from repro.core.blas import rgemm
+from repro.core.linalg import lu_solve, rgetrf
 from repro.kernels.ref import ddgemm_ref, qdgemm_ref
+from repro.solve import rgesv
 
 # per-tier unit roundoff of one engine FMA (dd: two_prod slack dominates;
 # qd: the O(eps^4) renormalization truncation)
@@ -121,6 +131,92 @@ def test_plan_precision_must_match_operands(tmp_cache):
     a = _rand("dd", (8, 8), seed=11)
     with pytest.raises(ValueError, match="precision"):
         gemm.execute(plan, a, a)
+
+
+# --------------------------------------------------------------------------
+# solver axis: (factor_tier x target_tier) x (plain | batched | sharded)
+# conformance-checked against the qd-direct oracle
+# --------------------------------------------------------------------------
+
+from repro.solve import LADDER_CELLS as SOLVER_CELLS  # noqa: E402
+
+_SOLVER_N, _SOLVER_NRHS = 12, 2
+
+
+@pytest.fixture(scope="module")
+def solver_oracle():
+    """qd-direct solve (full qd rgetrf + lu_solve): the accuracy ceiling."""
+    rng = np.random.default_rng(31)
+    a = rng.standard_normal((_SOLVER_N, _SOLVER_N)) + _SOLVER_N * np.eye(
+        _SOLVER_N)
+    b = rng.standard_normal((_SOLVER_N, _SOLVER_NRHS))
+    a_qd = mp.from_float(jnp.asarray(a), "qd")
+    b_qd = mp.from_float(jnp.asarray(b), "qd")
+    lu, piv = rgetrf(a_qd, block=8)
+    return a, b, lu_solve(lu, piv, b_qd)
+
+
+@pytest.mark.solver
+@pytest.mark.parametrize("mode", ["plain", "batched", "sharded"])
+@pytest.mark.parametrize("factor_tier,target_tier", SOLVER_CELLS)
+def test_solver_matches_qd_direct_oracle(factor_tier, target_tier, mode,
+                                         solver_oracle, tmp_cache):
+    a, b, x_oracle = solver_oracle
+    kwargs = dict(factor_tier=factor_tier, target_tier=target_tier,
+                  backend="xla")
+    if mode == "sharded":
+        from jax.sharding import Mesh
+
+        kwargs["mesh"] = Mesh(np.array(jax.devices()[:1]), ("rows",))
+    if mode == "batched":
+        # 2x is a power of two: the scaled RHS (and hence its solution)
+        # is exact at every tier, so the oracle scales exactly too
+        got, info = rgesv(a, np.stack([b, 2.0 * b]), **kwargs)
+        assert got.shape == (2, _SOLVER_N, _SOLVER_NRHS)
+        cells = [(got[0], x_oracle),
+                 (got[1], mp.mul_float(x_oracle, jnp.float64(2.0)))]
+    else:
+        got, info = rgesv(a, b, **kwargs)
+        cells = [(got, x_oracle)]
+    assert info.converged, (factor_tier, target_tier, mode,
+                            info.backward_errors)
+    # refinement must deliver the *target tier's* accuracy no matter how
+    # cheap the factorization rung was
+    for x, want in cells:
+        err = _rel_err(mp.promote(x, "qd"), want)
+        assert err < 64 * _SOLVER_N * ULP[target_tier], \
+            (factor_tier, target_tier, mode, err)
+
+
+@pytest.mark.solver
+@pytest.mark.parametrize("factor_tier,target_tier", SOLVER_CELLS)
+def test_refinement_backward_error_monotone(factor_tier, target_tier,
+                                            solver_oracle, tmp_cache):
+    a, b, _ = solver_oracle
+    _, info = rgesv(a, b, factor_tier=factor_tier, target_tier=target_tier,
+                    backend="xla")
+    h = info.backward_errors
+    assert all(later <= earlier for earlier, later in zip(h, h[1:])), h
+    assert not info.escalations  # well-conditioned: no rung ever stagnates
+
+
+@pytest.mark.solver
+def test_escalation_fires_exactly_on_stagnation(tmp_cache):
+    from repro.core.accuracy import hilbert_f64
+
+    n = 14  # cond ~ 1e18: f64 corrections crawl, the dd rung finishes
+    h = hilbert_f64(n)
+    b = h @ np.ones((n, 1))
+    _, info = rgesv(h, b, factor_tier="f64", target_tier="dd",
+                    backend="xla", max_iters=25)
+    assert info.converged
+    assert [(e["from"], e["to"]) for e in info.escalations] == \
+        [("f64", "dd")]
+    # the escalation iteration is exactly the first stagnating one
+    berrs = info.backward_errors
+    it = info.escalations[0]["iteration"]
+    assert berrs[it - 1] > 0.25 * berrs[it - 2]
+    assert all(berrs[i] <= 0.25 * berrs[i - 1] for i in range(2, it - 1))
 
 
 def test_qd_tiles_tune_independently(tmp_cache):

@@ -79,6 +79,16 @@ def test_qd_tier_descends_past_the_dd_floor():
     assert rqd.converged
     assert rdd.relative_gap > 1e-25, rdd.relative_gap   # dd floors higher
     assert rqd.relative_gap < 1e-2 * rdd.relative_gap
+    # ISSUE-4 acceptance: the Schur solves reach the qd accuracy floor via
+    # dd-factor + qd-refine (repro.solve rgesv) — measurably cheaper than
+    # qd-direct: on this cond(B)~1e10 instance every solve's factorization
+    # stays on the dd rung (observed: 118 solves, 0 qd factorizations,
+    # gap 6.7e-27 — the qd-direct floor at dd factorization cost)
+    st = rqd.schur_stats
+    assert st is not None and st["solves"] > 0
+    qd_factors = st["factorizations"].get("qd", 0)
+    assert qd_factors < st["solves"] // 2, st
+    assert st["factorizations"].get("dd", 0) > 0, st
 
 
 def test_theta_problem_structure():
