@@ -2,8 +2,9 @@
 
 PY ?= python
 
-.PHONY: tier1 test-fast conformance solver-gates bench bench-gemm \
-	bench-smoke bench-accuracy bench-lu tune ozaki-tune
+.PHONY: tier1 test-fast conformance solver-gates sharding-tests bench \
+	bench-gemm bench-gemm-mesh bench-smoke bench-accuracy bench-lu tune \
+	ozaki-tune
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -25,12 +26,25 @@ conformance:
 solver-gates:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m solver
 
+# every sharding-marked test on a real (forced host-device) 4-device mesh:
+# the SUMMA conformance axis runs its 1xN / Nx1 / 2x2 cells instead of
+# skipping, plus the 2x2 batched+sharded acceptance subprocess (CI job)
+sharding-tests:
+	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
+	PYTHONPATH=src $(PY) -m pytest -x -q -m sharding
+
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
 # emits BENCH_GEMM.json (perf trajectory artifact) via benchmarks/common.py
 bench-gemm:
 	PYTHONPATH=src $(PY) -m benchmarks.run bench_gemm
+
+# SUMMA topology sweep (per-mesh GEMM rows in BENCH_GEMM.json); pair with
+# forced host devices to fill every topology, as CI's sharding job does
+bench-gemm-mesh:
+	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
+	PYTHONPATH=src $(PY) -m benchmarks.run bench_gemm --mesh 1x1,1x2,2x1,2x2
 
 # every backend x tier at small n, conformance-checked against the ref
 # oracle — exits nonzero on a conformance failure (CI's bench-smoke job)

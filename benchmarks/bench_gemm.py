@@ -77,7 +77,50 @@ def _smoke():
         raise SystemExit(f"smoke conformance failures: {failures}")
 
 
-def run():
+def _mesh_sweep(mesh_arg: str):
+    """SUMMA topology sweep: per-mesh GEMM rates into BENCH_GEMM.json.
+
+    ``mesh_arg``: comma-separated ``RxC`` topologies (``--mesh 1x1,2x2``).
+    Topologies needing more devices than the process has are reported as
+    skipped rows rather than silently dropped (CI's ``sharding`` job forces
+    4 host devices so the standard sweep fills in).  Rates on forced host
+    devices measure the distribution overhead, not real multi-chip speedup
+    — the row's value is the per-topology *trajectory* across commits.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    n = 96
+    flops = 2.0 * n ** 3
+    a, b = rand_dd((n, n), 11), rand_dd((n, n), 12)
+    want = ddgemm_ref(a, b)
+    for topo in mesh_arg.split(","):
+        rows, sep, cols = topo.strip().lower().partition("x")
+        if not (sep and rows.isdigit() and cols.isdigit()):
+            raise SystemExit(
+                f"bad --mesh topology {topo.strip()!r}: want RxC, e.g. "
+                f"--mesh=1x2,2x2")
+        rows, cols = int(rows), int(cols)
+        if jax.device_count() < rows * cols:
+            emit(f"gemm_mesh/{rows}x{cols}/n={n}", 0.0,
+                 f"skipped=need_{rows * cols}_devices")
+            continue
+        mesh = Mesh(np.array(jax.devices()[: rows * cols]).reshape(
+            rows, cols), ("rows", "cols"))
+        got = block(matmul(a, b, backend="xla", mesh=mesh))
+        err = max_rel_err(got, want)
+        t = time_fn(lambda: block(matmul(a, b, backend="xla", mesh=mesh)),
+                    warmup=0, iters=3)
+        emit(f"gemm_mesh/{rows}x{cols}/n={n}", t * 1e6,
+             f"gflops={flops / t / 1e9:.4f};rel_err={err:.3e};"
+             f"devices={rows * cols}")
+
+
+def run(mesh: str = ""):
+    if mesh:
+        _mesh_sweep(mesh)
+        dump_json("BENCH_GEMM.json", prefix="gemm_")
+        return
     if os.environ.get("BENCH_SMOKE"):
         _smoke()
         return

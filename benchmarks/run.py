@@ -12,8 +12,34 @@ Mapping to the paper (also in DESIGN.md §7):
   bench_lm         framework: LM train-step throughput + precision policy
 """
 
+import inspect
 import sys
 import time
+
+
+def _parse_argv(argv):
+    """Split ``[module-filter] [--flag value | --flag=value ...]``.
+
+    Flags become keyword options handed to any benchmark whose ``run()``
+    accepts them (e.g. ``bench_gemm --mesh 2x2,1x4`` drives the SUMMA
+    topology sweep); positional args filter which modules run.
+    """
+    only, opts = None, {}
+    it = iter(argv)
+    for arg in it:
+        if arg.startswith("--"):
+            key, eq, val = arg[2:].partition("=")
+            if not eq:
+                val = next(it, None)
+                if val is None or val.startswith("--"):
+                    # a valueless flag must fail here, not silently bind ""
+                    # and run the (possibly minutes-long) default suite
+                    raise SystemExit(
+                        f"--{key} requires a value (use --{key}=VALUE)")
+            opts[key.replace("-", "_")] = val
+        elif only is None:
+            only = arg
+    return only, opts
 
 
 def main() -> None:
@@ -22,14 +48,25 @@ def main() -> None:
                    bench_nonsquare, bench_sdp, bench_tile)
 
     print("name,us_per_call,derived")
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    for mod in (bench_gemm, bench_tile, bench_nonsquare, bench_accuracy,
-                bench_lu, bench_sdp, bench_lm):
-        if only and only not in mod.__name__:
-            continue
+    only, opts = _parse_argv(sys.argv[1:])
+    selected = [mod for mod in (bench_gemm, bench_tile, bench_nonsquare,
+                                bench_accuracy, bench_lu, bench_sdp,
+                                bench_lm)
+                if not only or only in mod.__name__]
+    accepted = {mod: {k for k in opts
+                      if k in inspect.signature(mod.run).parameters}
+                for mod in selected}
+    unknown = opts.keys() - set().union(*accepted.values(), set())
+    if unknown:
+        # a misspelled flag must fail up front, not silently run the
+        # (possibly minutes-long) default suite first
+        raise SystemExit(
+            f"unknown option(s) {sorted(unknown)}: no selected "
+            f"benchmark's run() accepts them")
+    for mod in selected:
         print(f"# {mod.__name__} — {mod.__doc__.strip().splitlines()[0]}",
               flush=True)
-        mod.run()
+        mod.run(**{k: opts[k] for k in accepted[mod]})
     print(f"# total {time.time() - t0:.0f}s")
 
 

@@ -16,9 +16,12 @@ of either tier (promoted to match the product).
 
 The product routes through the unified execution engine (``repro.gemm``):
 pass a prebuilt ``GemmPlan`` via ``plan=`` to pin every dispatch decision,
-or keyword overrides (``backend=``, ``mesh=``, block shapes) that feed the
-planner; with neither, the engine plans from shape, precision, platform,
-and the tuned-block cache.
+or keyword overrides (``backend=``, ``mesh=`` — with an optional
+``shard_axis``/``shard_axis_n``/``k_panel`` shard spec for the 2-D SUMMA
+distribution — block shapes) that feed the planner; with neither, the
+engine plans from shape, precision, platform, and the tuned-block cache.
+``rsyrk``'s SDP-shaped calls and batched operands compose with the mesh
+in one engine call.
 """
 
 from __future__ import annotations

@@ -31,7 +31,7 @@ __all__ = [
     "PRECISIONS", "nlimbs", "precision_of", "limbs", "from_limbs",
     "map_limbs", "from_float", "zeros", "to_float", "promote",
     "add", "sub", "neg", "abs_", "mul", "mul_float", "div", "sqrt",
-    "where", "sum_", "dot", "broadcast_to", "eps", "max_abs",
+    "where", "sum_", "dot", "broadcast_to", "eps", "max_abs", "is_zero",
 ]
 
 PRECISIONS = {"dd": 2, "qd": 4}
@@ -136,6 +136,20 @@ def max_abs(a):
     the max-|entry| is exactly the max of |hi|.
     """
     return jnp.max(jnp.abs(limbs(a)[0]))
+
+
+def is_zero(x):
+    """Traced bool (elementwise): every limb of ``x`` is exactly zero.
+
+    The single source for "is this tier value zero" — the engine's BLAS
+    ``beta == 0`` guard and the fused kernel drain both key on it, so a
+    future change to the zero encoding lands in one place.
+    """
+    z = None
+    for l in limbs(x):
+        e = l == 0
+        z = e if z is None else jnp.logical_and(z, e)
+    return z
 
 
 def mul(a, b):

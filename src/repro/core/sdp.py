@@ -437,6 +437,10 @@ def solve_sdp(prob: SDPProblem, *, precision: str = "binary128",
     ``gemm_overrides`` feeds the GEMM engine's planner for every extended-
     precision product (default pins backend="xla"; see the Ozaki caveat
     above — the engine infers the limb count from the operand type).
+    Passing ``mesh=`` (plus optional ``shard_axis``/``shard_axis_n``)
+    distributes every Schur-stack GEMM — including the vmap-batched
+    per-constraint ``X @ (A_j Z^-1)`` stack — over a 2-D device mesh via
+    the engine's SUMMA path (DESIGN.md §11).
     """
     ops = _ops(precision, gemm_overrides)
     if tol_gap is None:

@@ -24,13 +24,13 @@ from .plan import BACKENDS, PRECISIONS, GemmPlan, make_plan, \
     replan_precision, resolve_backend
 from .engine import execute, matmul
 from .autotune import autotune, candidate_blocks, vmem_bytes
-from .cache import PlanCache, cache_key, default_cache, set_default_cache, \
-    shape_bucket
+from .cache import PlanCache, batch_bucket, cache_key, default_cache, \
+    set_default_cache, shape_bucket
 
 __all__ = [
     "BACKENDS", "PRECISIONS", "GemmPlan", "make_plan", "replan_precision",
     "resolve_backend", "execute", "matmul",
     "autotune", "candidate_blocks", "vmem_bytes",
-    "PlanCache", "cache_key", "default_cache", "set_default_cache",
-    "shape_bucket",
+    "PlanCache", "batch_bucket", "cache_key", "default_cache",
+    "set_default_cache", "shape_bucket",
 ]

@@ -123,6 +123,7 @@ def _expand_slice_candidates(m: int, k: int, n: int, blocks: Sequence[dict],
 
 def autotune(m: int, k: int, n: int, *, dtype=jnp.float64,
              precision: str = "dd", backend: str = "pallas",
+             batch_shape: Tuple[int, ...] = (),
              candidates: Optional[Sequence[dict]] = None,
              cache: Optional[plan_cache.PlanCache] = None,
              seed: int = 0, iters: int = 2, persist: bool = True) -> GemmPlan:
@@ -130,10 +131,13 @@ def autotune(m: int, k: int, n: int, *, dtype=jnp.float64,
 
     Returns the tuned ``GemmPlan`` for the (m, k, n) problem at the given
     precision tier; subsequent ``make_plan`` calls in the same (shape
-    bucket, limb count) pick the entry up from the cache automatically.
-    For ``backend="ozaki-pallas"`` the search space is block shapes x
-    ``n_slices`` (never below the exactness minimum) and the winner's
-    slice count is persisted alongside its blocks.
+    bucket, limb count, batch bucket) pick the entry up from the cache
+    automatically.  ``batch_shape`` times the sweep on vmap-batched
+    operands and persists under the batched bucket (schema v3 keys batched
+    plans apart from the 2-D bucket — this is the API that populates
+    them).  For ``backend="ozaki-pallas"`` the search space is block
+    shapes x ``n_slices`` (never below the exactness minimum) and the
+    winner's slice count is persisted alongside its blocks.
     """
     dtype = jnp.dtype(dtype)
     nlimbs = PRECISIONS[precision]
@@ -153,22 +157,31 @@ def autotune(m: int, k: int, n: int, *, dtype=jnp.float64,
     from . import engine
 
     rng = np.random.default_rng(seed)
-    a = mp.from_float(jnp.asarray(rng.random((m, k)) - 0.5, dtype), precision)
+    batch_shape = tuple(batch_shape)
+    a = mp.from_float(
+        jnp.asarray(rng.random(batch_shape + (m, k)) - 0.5, dtype),
+        precision)
     b = mp.from_float(jnp.asarray(rng.random((k, n)) - 0.5, dtype), precision)
 
     best, best_t = None, float("inf")
     for cand in candidates:
         blk = {x: cand[x] for x in ("bm", "bn", "bk")}
         plan = make_plan(m, k, n, dtype=dtype, precision=precision,
-                         backend=backend, use_cache=False,
+                         backend=backend, batch_shape=batch_shape,
+                         use_cache=False,
                          n_slices=cand.get("n_slices"), **blk)
         t = _time_once(lambda: engine.execute(plan, a, b), iters=iters)
         if t < best_t:
             best, best_t = plan, t
 
     if persist:
+        # the entry lands under the bucket that was actually timed: the
+        # 2-D (b1) bucket by default, or the vmap-batched bucket when a
+        # batch_shape was swept (cache schema v3 keys them apart — their
+        # VMEM pressure differs by the batch factor)
         key = plan_cache.cache_key(best.platform, dtype.name, m, k, n,
-                                   backend, nlimbs=nlimbs)
+                                   backend, nlimbs=nlimbs,
+                                   batch_shape=batch_shape)
         entry = {"bm": best.bm, "bn": best.bn, "bk": best.bk,
                  "us_per_call": best_t * 1e6,
                  "bucket": plan_cache.shape_bucket(m, k, n)}

@@ -28,15 +28,18 @@ import warnings
 from typing import Optional
 
 __all__ = ["PlanCache", "default_cache", "set_default_cache", "shape_bucket",
-           "cache_key", "SCHEMA"]
+           "batch_bucket", "cache_key", "SCHEMA"]
 
 _ENV_VAR = "REPRO_GEMM_CACHE"
 
 # entry-schema version, embedded in every key.  v2: entries may carry an
 # ``n_slices`` field (tuned alongside the blocks for the ozaki-pallas
-# backend); bumping the version orphans pre-slice-aware entries instead of
-# letting them half-describe a plan.
-SCHEMA = 2
+# backend).  v3: keys fold in a batch bucket — a vmap-batched call runs
+# ``prod(batch)`` kernel instances concurrently, so its VMEM pressure (and
+# winning tile) differs from the 2-D bucket's by the batch factor; sharing
+# one row silently reused 2-D tiles for batched work.  Bumping the version
+# orphans old entries instead of letting them half-describe a plan.
+SCHEMA = 3
 
 
 def _next_pow2(x: int, floor: int = 8) -> int:
@@ -49,17 +52,32 @@ def shape_bucket(m: int, k: int, n: int) -> str:
     return f"{_next_pow2(m)}x{_next_pow2(k)}x{_next_pow2(n)}"
 
 
+def batch_bucket(batch_shape=()) -> str:
+    """Coarsen a vmap batch shape to its power-of-two size bucket.
+
+    ``b1`` is the plain 2-D call; a batched call buckets on the flattened
+    batch size (a (2, 3) batch and a (6,) batch stress VMEM identically).
+    """
+    size = 1
+    for d in batch_shape:
+        size *= int(d)
+    return f"b{_next_pow2(size, floor=1)}"
+
+
 def cache_key(platform: str, dtype_name: str, m: int, k: int, n: int,
-              backend: str, nlimbs: int = 2) -> str:
+              backend: str, nlimbs: int = 2, batch_shape=()) -> str:
     """Cache key for one tuning bucket (schema-versioned).
 
     Keys on the limb count so precision tiers tune independently (a QD tile
     streams twice the limb planes of a DD tile and wants different blocks),
-    and on ``SCHEMA`` so entries written under an older entry layout are
-    orphaned rather than misread.
+    on the batch bucket so vmap-batched plans tune apart from the 2-D
+    bucket (their VMEM pressure differs by the batch factor), and on
+    ``SCHEMA`` so entries written under an older entry layout are orphaned
+    rather than misread.
     """
     dt = dtype_name if nlimbs == 2 else f"{dtype_name}x{nlimbs}"
-    return f"v{SCHEMA}/{platform}/{dt}/{shape_bucket(m, k, n)}/{backend}"
+    return (f"v{SCHEMA}/{platform}/{dt}/{batch_bucket(batch_shape)}/"
+            f"{shape_bucket(m, k, n)}/{backend}")
 
 
 class PlanCache:

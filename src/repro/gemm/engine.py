@@ -10,11 +10,20 @@ engine is limb-count generic:
     flattened and vmapped over the planned 2-D kernel, so SDP's
     per-constraint ``X @ (A_j Z^-1)`` stacks run as one call instead of a
     Python loop over constraints;
-  * **sharded GEMM** — with a mesh in the plan, the M dimension is
-    row-sharded via ``shard_map``: each device computes its row panel
-    against a replicated B and the output *stays* row-sharded
-    (``P(axis, None)``) — no all-gather on the result, matching the paper's
-    Feed/Drain streaming where C' tiles drain independently.
+  * **sharded GEMM** — with a mesh in the plan, execution is a SUMMA-style
+    2-D distribution via ``shard_map``: C's row blocks shard over
+    ``plan.shard_axis``, its column blocks over ``plan.shard_axis_n``, and
+    a ``lax.fori_loop`` walks the K dimension in ``k_panel``-deep steps,
+    broadcasting the owning device's A row-panel along the column axis and
+    B column-panel along the row axis per step (an exact masked-psum
+    broadcast — non-owners contribute zero limbs) and accumulating into a
+    local C' block in tier arithmetic.  This is the software analogue of
+    the paper's DDR→BRAM panel streaming, with the fori_loop carry playing
+    the double-buffered accumulator; the output *stays* 2-D block-sharded
+    (``P(axis_m, axis_n)``) — no all-gather on the result, matching the
+    paper's Feed/Drain streaming where C' tiles drain independently.  A
+    1-axis mesh degenerates to the old row-sharded layout, and batched +
+    sharded calls compose ``vmap`` outside the ``shard_map``.
 
 Backend kernels per tier: the Pallas systolic tiles (``kernels/ddgemm.py``
 / ``kernels/qdgemm.py`` — same tile schedule, 2 vs 4 limb planes), the
@@ -192,7 +201,14 @@ def _execute_2d(plan: GemmPlan, a, b):
 # --------------------------------------------------------------------------
 
 
-def _execute_batched(plan: GemmPlan, a, b):
+def _execute_batched(plan: GemmPlan, a, b, inner=None):
+    """vmap ``inner`` (default: the planned 2-D kernel) over batch dims.
+
+    ``inner`` is the per-matrix execution body; the sharded path passes the
+    SUMMA ``shard_map`` runner here, composing vmap *outside* the shard_map
+    so batched + sharded is one call (shard_map has a batching rule).
+    """
+    inner = inner or (lambda x, y: _execute_2d(plan, x, y))
     a_batch = a.shape[:-2]
     b_batch = b.shape[:-2]
     batch = jnp.broadcast_shapes(a_batch, b_batch)
@@ -209,7 +225,7 @@ def _execute_batched(plan: GemmPlan, a, b):
     af = flat(a, bool(a_batch))
     bf = flat(b, bool(b_batch))
     # DD/QD are NamedTuple pytrees: in_axes=0 maps every limb plane
-    fn = jax.vmap(lambda x, y: _execute_2d(plan, x, y),
+    fn = jax.vmap(inner,
                   in_axes=(0 if a_batch else None, 0 if b_batch else None))
     out = fn(af, bf)
     m, n = out.shape[-2:]
@@ -261,13 +277,48 @@ def _as_scalar(x, precision: str, dtype):
         return mp.from_float(jnp.asarray(x, dtype), precision)
 
 
+def _static_zero(x) -> bool:
+    """True iff ``x`` is *statically known* to be zero.
+
+    Python numbers answer directly; concrete arrays / multi-limb scalars
+    are inspected limb-wise.  A traced value answers False — it may still
+    be zero at runtime, which the ``where``-guard in ``_apply_epilogue``
+    (and the fused kernel drain) handles without reading C's values.
+    """
+    if x is None:
+        return False
+    if isinstance(x, (int, float)):
+        return x == 0
+    try:
+        ls = mp.limbs(x)
+    except TypeError:
+        ls = [x]
+    try:
+        import numpy as np
+
+        return all(not np.any(np.asarray(l)) for l in ls)
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        return False
+
+
 def _apply_epilogue(out, alpha, beta, c):
     """out = alpha * out [+ beta * c] in the operands' own tier — the
-    post-step form, numerically identical to the kernel-fused drain."""
+    post-step form, numerically identical to the kernel-fused drain.
+
+    BLAS semantics: ``beta == 0`` means C is **not read** — a NaN/Inf in C
+    must not leak through ``0 * C``.  Statically-zero betas never reach
+    here (``execute`` drops C outright); a *traced* beta that is zero at
+    runtime is handled by masking the ``beta * C`` term with a select, so
+    the NaN produced by ``0 * NaN`` is discarded, not propagated.
+    """
     if alpha is not None:
         out = mp.mul(mp.broadcast_to(alpha, out.shape), out)
     if c is not None:
-        out = mp.add(out, mp.mul(mp.broadcast_to(beta, c.shape), c))
+        bc = mp.mul(mp.broadcast_to(beta, c.shape), c)
+        bc = mp.where(jnp.broadcast_to(mp.is_zero(beta), bc.shape),
+                      mp.map_limbs(jnp.zeros_like, bc), bc)
+        out = mp.add(out, bc)
     return out
 
 
@@ -279,39 +330,133 @@ _apply_epilogue_jit = jax.jit(_apply_epilogue)
 
 
 # --------------------------------------------------------------------------
-# sharded execution (M-dim row sharding, all-gather-free output)
+# sharded execution: SUMMA-style 2-D distribution, all-gather-free output
 # --------------------------------------------------------------------------
 
 
-def _execute_sharded(plan: GemmPlan, a, b):
+def _summa_runner(plan: GemmPlan, m: int, k: int, n: int, nl: int):
+    """Build the ``shard_map``-wrapped SUMMA loop for one global shape.
+
+    Layout (the classic SUMMA block distribution, DESIGN.md §11):
+
+      * A's rows shard over ``shard_axis`` (Pr), its K columns over
+        ``shard_axis_n`` (Pc);
+      * B's K rows shard over ``shard_axis`` (Pr), its columns over
+        ``shard_axis_n`` (Pc);
+      * C' blocks live at ``P(shard_axis, shard_axis_n)`` and never move.
+
+    Each of the ``Kpad / k_panel`` K-steps broadcasts the owning column's
+    A row-panel along ``shard_axis_n`` and the owning row's B column-panel
+    along ``shard_axis`` — a masked ``psum`` (non-owners contribute exact
+    zero limbs, so the broadcast is exact in tier arithmetic) — then folds
+    the local ``(m_loc, kp) @ (kp, n_loc)`` panel product into the
+    fori_loop-carried accumulator with a tier add.  This is the engine's
+    analogue of the paper's DDR→BRAM panel streaming: the carry is the
+    BRAM-resident C' tile, the per-step panels are the streamed operands.
+
+    Returns ``(run, (mpad, npad, kpad))`` where ``run(*a_limbs, *b_limbs)``
+    maps padded 2-D operands to the padded, still-2-D-sharded product.
+    """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    mesh, axis = plan.mesh, plan.shard_axis
-    nshards = mesh.shape[axis]
-    nl = mp.nlimbs(a)
-    m, k = a.shape
-    mpad = _round_up(m, nshards)
-    a_p = mp.map_limbs(lambda l: _pad_to(l, mpad, k), a)
+    mesh, ax_m, ax_n = plan.mesh, plan.shard_axis, plan.shard_axis_n
+    pr = mesh.shape[ax_m] if ax_m is not None else 1
+    pc = mesh.shape[ax_n] if ax_n is not None else 1
+    lcm = math.lcm(pr, pc)
+    # panel depth never exceeds a device's K chunk, so a small-K problem
+    # does not pad its K dimension up to a full (oversized) panel
+    kp = max(1, min(plan.k_panel or plan.bk, -(-k // lcm)))
+    # K pads so every device's contiguous chunk is whole panels: A splits K
+    # over the column axis, B over the row axis, so both chunkings must be
+    # panel-aligned (zero padding is exact in multi-limb arithmetic)
+    kpad = _round_up(k, kp * lcm)
+    mpad, npad = _round_up(m, pr), _round_up(n, pc)
+    ka, kb = kpad // pc, kpad // pr  # local K chunk held of A / of B
+    steps = kpad // kp
 
     def local(*limbs):
-        out = _execute_2d(plan, mp.from_limbs(limbs[:nl]),
-                          mp.from_limbs(limbs[nl:]))
-        return tuple(mp.limbs(out))
+        al = mp.from_limbs(limbs[:nl])       # (mpad/pr, ka)
+        bl = mp.from_limbs(limbs[nl:])       # (kb, npad/pc)
+        m_loc, n_loc = al.shape[0], bl.shape[1]
+        ci = jax.lax.axis_index(ax_n) if ax_n is not None else None
+        ri = jax.lax.axis_index(ax_m) if ax_m is not None else None
 
-    row = P(axis, None)
-    rep = P(None, None)
-    out = shard_map(
+        def bcast(panel, owner, me, axis_name):
+            """Broadcast the owner's panel along ``axis_name`` (exact:
+            non-owners contribute zero limbs to the psum)."""
+            if axis_name is None:
+                return panel
+            return mp.map_limbs(
+                lambda l: jax.lax.psum(
+                    jnp.where(me == owner, l, jnp.zeros_like(l)),
+                    axis_name), panel)
+
+        def step(t, carry):
+            acc = mp.from_limbs(carry)
+            g = t * kp                          # global K offset of panel t
+            own_a, off_a = g // ka, g % ka      # column owning A(:, panel t)
+            own_b, off_b = g // kb, g % kb      # row owning B(panel t, :)
+            apan = mp.map_limbs(
+                lambda l: jax.lax.dynamic_slice(l, (0, off_a), (m_loc, kp)),
+                al)
+            bpan = mp.map_limbs(
+                lambda l: jax.lax.dynamic_slice(l, (off_b, 0), (kp, n_loc)),
+                bl)
+            apan = bcast(apan, own_a, ci, ax_n)
+            bpan = bcast(bpan, own_b, ri, ax_m)
+            acc = mp.add(acc, _execute_2d(plan, apan, bpan))
+            return tuple(mp.limbs(acc))
+
+        z = mp.zeros((m_loc, n_loc), plan.precision, dtype=limbs[0].dtype)
+        return jax.lax.fori_loop(0, steps, step, tuple(mp.limbs(z)))
+
+    blk = P(ax_m, ax_n)
+    run = shard_map(
         local, mesh=mesh,
-        in_specs=(row,) * nl + (rep,) * nl,
-        # the output stays row-sharded: each device drains its own C' panel,
-        # no all-gather — consumers slice or keep computing shard-local
-        out_specs=(row,) * nl,
+        in_specs=(blk,) * (2 * nl),
+        # the output stays 2-D block-sharded: each device drains its own C'
+        # block, no all-gather — consumers slice or keep computing
+        # shard-local (the paper's independent per-PE Feed/Drain)
+        out_specs=(blk,) * nl,
         check_rep=False,
-    )(*mp.limbs(a_p), *mp.limbs(b))
-    if mpad == m:
-        return mp.from_limbs(out)  # keeps the row-sharded layout
-    return mp.from_limbs([l[:m] for l in out])
+    )
+    return run, (mpad, npad, kpad)
+
+
+# compile-once cache for the SUMMA runner: shard_map applied eagerly
+# re-traces its body every call (thousands of ops per limb at the qd tier —
+# the cost the plan-keyed jit wrappers above exist to avoid), so the built
+# runner is jitted and memoized.  The mesh must be part of the key
+# explicitly: plan equality/hash EXCLUDES the mesh field, so two plans that
+# compare equal can still target different meshes.
+@functools.lru_cache(maxsize=128)
+def _summa_runner_jit(plan: GemmPlan, mesh, m: int, k: int, n: int,
+                      nl: int):
+    assert mesh is plan.mesh or mesh == plan.mesh
+    run, pads = _summa_runner(plan, m, k, n, nl)
+    return jax.jit(run), pads
+
+
+def _execute_sharded(plan: GemmPlan, a, b):
+    nl = mp.nlimbs(a)
+    m, k = a.shape[-2:]
+    n = b.shape[-1]
+    run, (mpad, npad, kpad) = _summa_runner_jit(plan, plan.mesh, m, k, n,
+                                                nl)
+
+    def run2d(x, y):
+        out = run(*mp.limbs(_pad(x, mpad, kpad)),
+                  *mp.limbs(_pad(y, kpad, npad)))
+        if (mpad, npad) == (m, n):
+            return mp.from_limbs(out)  # keeps the 2-D sharded layout
+        return mp.from_limbs([l[:m, :n] for l in out])
+
+    if len(a.shape) > 2 or len(b.shape) > 2:
+        # batched + sharded: vmap composes OUTSIDE the shard_map — each
+        # batch element runs the same SUMMA loop on the same mesh
+        return _execute_batched(plan, a, b, inner=run2d)
+    return run2d(a, b)
 
 
 # --------------------------------------------------------------------------
@@ -327,7 +472,10 @@ def execute(plan: GemmPlan, a, b, *, alpha=None, beta=None, c=None):
     kernel drain on the 2-D ``ozaki-pallas`` path, applied as an identical
     tier-arithmetic post-step everywhere else.  With no epilogue operands
     this is plain C = A @ B; with ``c`` alone, alpha and beta default to
-    1.0 (C is *added*, never silently dropped).
+    1.0 (C is *added*, never silently dropped).  BLAS semantics govern
+    beta: ``beta == 0`` means C is **not read** (NaN/Inf in C cannot
+    leak), and a nonzero beta without ``c=`` raises rather than being
+    silently dropped.
     """
     prec = mp.precision_of(a)
     if mp.precision_of(b) != prec:
@@ -341,6 +489,24 @@ def execute(plan: GemmPlan, a, b, *, alpha=None, beta=None, c=None):
     if a.shape[-1] != b.shape[-2]:
         raise ValueError(f"inner dims mismatch: {a.shape} x {b.shape}")
     limb_dtype = mp.limbs(a)[0].dtype
+    if beta is not None and c is None:
+        # BLAS Rgemm: beta scales C, so beta without a C operand is
+        # meaningful only when it is zero ("C is not read").  Anything
+        # else would be silently dropped — raise instead, mirroring the
+        # alpha/c defaulting rules (c alone => alpha = beta = 1, never a
+        # dropped operand)
+        if not _static_zero(beta):
+            raise ValueError(
+                f"beta={beta!r} was passed without c=; beta scales C, so "
+                f"a nonzero (or traced) beta without a C operand would be "
+                f"silently dropped — pass c=, or beta=0 (BLAS: C not read)")
+        beta = None
+    if c is not None and _static_zero(beta):
+        # BLAS: beta == 0 means C is NOT read — drop the term outright so
+        # a NaN/Inf in C cannot leak through 0 * C (traced zero betas get
+        # the same guarantee from the where-guard in _apply_epilogue /
+        # the fused kernel drain)
+        c = beta = None
     if c is not None and alpha is None:
         alpha = 1.0
     if alpha is not None:
@@ -351,15 +517,20 @@ def execute(plan: GemmPlan, a, b, *, alpha=None, beta=None, c=None):
             raise TypeError(f"C tier {mp.precision_of(c)} != operand "
                             f"tier {prec}")
     batched = len(a.shape) > 2 or len(b.shape) > 2
-    if batched:
-        if plan.mesh is not None:
-            raise NotImplementedError("batched + sharded GEMM in one call")
-        if plan.batch == "none":
-            raise ValueError(
-                "plan was made for 2-D operands but inputs have batch dims; "
-                "rebuild with batch_shape= (engine.matmul does this)")
+    # either axis suffices: a 1-axis mesh claimed entirely by an explicit
+    # shard_axis_n= is pure column sharding (shard_axis stays None), which
+    # the SUMMA loop handles — it must not silently run unsharded
+    sharded = plan.mesh is not None and (
+        plan.shard_axis is not None or plan.shard_axis_n is not None)
+    if batched and plan.batch == "none":
+        raise ValueError(
+            "plan was made for 2-D operands but inputs have batch dims; "
+            "rebuild with batch_shape= (engine.matmul does this)")
+    if batched and not sharded:
         return _execute_batched_jit(a, b, alpha, beta, c, plan=plan)
-    if plan.mesh is not None and plan.shard_axis is not None:
+    if sharded:
+        # _execute_sharded routes batched operands through vmap-outside-
+        # shard_map itself, so batched + sharded is one engine call
         out = _execute_sharded(plan, a, b)
         if alpha is None and c is None:
             return out

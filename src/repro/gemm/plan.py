@@ -4,9 +4,14 @@ The paper's FPGA fixes its execution configuration (PE-array shape, M_Tile,
 operand format) at synthesis time; every GEMM then streams through that one
 design.  ``GemmPlan`` is the runtime analogue: a frozen record of every
 choice the engine needs — backend, block shapes, limb dtype, interpret mode,
-batch strategy, and an optional mesh/axis for multi-device row sharding —
+batch strategy, and an optional mesh shard spec for the multi-device SUMMA
+distribution —
 produced once by ``make_plan`` from the problem shape and platform, then
-handed to ``engine.execute``.
+handed to ``engine.execute``.  The shard spec is 2-D: ``shard_axis`` /
+``shard_axis_n`` name the mesh axes carrying C's row / column blocks (named
+through ``runtime.sharding``'s logical-axis rule tables) and ``k_panel``
+fixes the depth of the A/B panels the SUMMA loop broadcasts per K-step —
+the software analogue of the paper's DDR→BRAM panel streaming granularity.
 
 Block shapes resolve in priority order: explicit overrides > tuned entries
 from the on-disk cache (written by ``autotune``) > the clamped heuristic
@@ -69,7 +74,9 @@ class GemmPlan:
     precision: str = "dd"             # precision tier: dd (2 limbs) | qd (4)
     batch: str = "none"               # none | vmap
     batch_shape: Tuple[int, ...] = ()
-    shard_axis: Optional[str] = None  # mesh axis for M-dim row sharding
+    shard_axis: Optional[str] = None  # mesh axis sharding the M (row) dim
+    shard_axis_n: Optional[str] = None  # mesh axis sharding the N (col) dim
+    k_panel: Optional[int] = None     # SUMMA K-panel depth (default: bk)
     mesh: Any = dataclasses.field(default=None, compare=False, repr=False)
     slice_dtype: Optional[str] = None  # ozaki operand slices (bf16 on TPU)
     acc_dtype: Optional[str] = None    # ozaki accumulator (f32 on TPU)
@@ -121,6 +128,8 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
               bk: Optional[int] = None, interpret: Optional[bool] = None,
               platform: Optional[str] = None, mesh=None,
               shard_axis: Optional[str] = None,
+              shard_axis_n: Optional[str] = None,
+              k_panel: Optional[int] = None,
               slice_dtype=None, acc_dtype=None,
               n_slices: Optional[int] = None,
               target_bits: Optional[int] = None, full: Optional[bool] = None,
@@ -153,12 +162,43 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
     if chunk is not None:
         bk = bk or chunk  # legacy xla-backend spelling of the K block
 
+    if mesh is not None:
+        # the dormant logical-axis rule tables name the mesh axes: "gemm_m"
+        # / "gemm_n" resolve against the mesh so GEMM meshes (rows/cols)
+        # and production LM meshes (data/model) both work unannotated.
+        # Fully-explicit axes route through the same resolver so a typo'd
+        # or duplicated axis fails HERE, not deep inside shard_map
+        from repro.runtime.sharding import gemm_mesh_axes
+
+        shard_axis, shard_axis_n = gemm_mesh_axes(
+            mesh, m_axis=shard_axis, n_axis=shard_axis_n)
+    if mesh is None and not (shard_axis is None and shard_axis_n is None
+                             and k_panel is None):
+        # a shard spec without a mesh would silently run unsharded — the
+        # same dropped-operand failure mode the beta-without-c rule stops
+        raise ValueError(
+            "shard_axis/shard_axis_n/k_panel require mesh= (without a "
+            "mesh there is nothing to shard over)")
+    if k_panel is not None and k_panel <= 0:
+        raise ValueError(f"k_panel must be positive, got {k_panel}")
+
+    # tuned blocks are looked up for the shape a device actually runs: a
+    # sharded plan's per-device SUMMA panels are the (m/Pr, k, n/Pc) local
+    # problem, not the global one the caller named
+    m_l, n_l = m, n
+    if mesh is not None:
+        if shard_axis is not None:
+            m_l = -(-m // mesh.shape[shard_axis])
+        if shard_axis_n is not None:
+            n_l = -(-n // mesh.shape[shard_axis_n])
+
     source = "heuristic"
     blocks = dict(DEFAULT_BLOCKS)
     if use_cache and be in ("pallas", "xla", "ozaki-pallas") \
             and (bm, bn, bk) == (None,) * 3:
-        key = plan_cache.cache_key(platform, dtype.name, m, k, n, be,
-                                   nlimbs=PRECISIONS[precision])
+        key = plan_cache.cache_key(platform, dtype.name, m_l, k, n_l, be,
+                                   nlimbs=PRECISIONS[precision],
+                                   batch_shape=batch_shape)
         tuned = plan_cache.default_cache().get(key)
         # adopt only well-formed entries: the cache is a hint, and a bad
         # persistent value (hand-edit, corruption) must degrade to the
@@ -179,7 +219,7 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
                     isinstance(tuned.get("n_slices"), int) and \
                     tuned["n_slices"] > 1:
                 n_slices = tuned["n_slices"]  # tuned alongside the blocks
-    blocks = _clamp_blocks(m, k, n, blocks)
+    blocks = _clamp_blocks(m_l, k, n_l, blocks)
     if bm or bn or bk:
         source = "override"
     blocks["bm"] = bm or blocks["bm"]
@@ -213,14 +253,12 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
             n_slices = target_bits = None
             full = None
 
-    if mesh is not None and shard_axis is None:
-        shard_axis = mesh.axis_names[0]
-
     return GemmPlan(
         backend=be, limb_dtype=dtype.name, interpret=bool(interpret),
         platform=platform, precision=precision,
         batch="vmap" if batch_shape else "none",
-        batch_shape=tuple(batch_shape), shard_axis=shard_axis, mesh=mesh,
+        batch_shape=tuple(batch_shape), shard_axis=shard_axis,
+        shard_axis_n=shard_axis_n, k_panel=k_panel, mesh=mesh,
         slice_dtype=jnp.dtype(slice_dtype).name if slice_dtype else None,
         acc_dtype=jnp.dtype(acc_dtype).name if acc_dtype else None,
         n_slices=n_slices, slice_beta=slice_beta,
@@ -251,4 +289,5 @@ def replan_precision(plan: GemmPlan, m: int, k: int, n: int,
         m, k, n, dtype=plan.limb_dtype, precision=precision,
         backend=backend, batch_shape=plan.batch_shape,
         interpret=plan.interpret, platform=plan.platform,
-        mesh=plan.mesh, shard_axis=plan.shard_axis)
+        mesh=plan.mesh, shard_axis=plan.shard_axis,
+        shard_axis_n=plan.shard_axis_n, k_panel=plan.k_panel)

@@ -147,7 +147,15 @@ def _ozgemm_kernel(*refs, nlimbs: int, beta: int, n_slices: int,
         if epilogue == "full":
             beta_s = mp.from_limbs([r[...] for r in beta_refs])
             c = mp.from_limbs([r[...] for r in c_refs])
-            res = mp.add(res, mp.mul(mp.broadcast_to(beta_s, c.shape), c))
+            bc = mp.mul(mp.broadcast_to(beta_s, c.shape), c)
+            # BLAS: beta == 0 means C is NOT read — statically-zero betas
+            # never reach the kernel (the engine drops C), but a beta that
+            # is only zero at run time (traced epilogue operand) must not
+            # leak NaN/Inf from C through 0 * C; the select discards the
+            # poisoned product.  Same guard as engine._apply_epilogue.
+            bc = mp.where(jnp.broadcast_to(mp.is_zero(beta_s), bc.shape),
+                          mp.map_limbs(jnp.zeros_like, bc), bc)
+            res = mp.add(res, bc)
         for o, v in zip(o_refs, res.limbs()):
             o[...] = v
 

@@ -36,8 +36,10 @@ __all__ = [
     "logical_spec",
     "param_sharding",
     "act_sharding",
+    "gemm_mesh_axes",
     "DEFAULT_PARAM_RULES",
     "DEFAULT_ACT_RULES",
+    "DEFAULT_GEMM_RULES",
 ]
 
 # parameters: FSDP over data(+pod) on the "embed"-like dimension, TP over
@@ -77,6 +79,62 @@ DEFAULT_ACT_RULES: dict = {
     "experts": "model",
     "expert_cap": None,
 }
+
+
+# GEMM output logical axes for the engine's 2-D SUMMA distribution
+# (repro.gemm): "gemm_m" is the C row dimension, "gemm_n" the C column
+# dimension.  Each value lists mesh-axis *candidates* in preference order —
+# the first name present in the mesh (and not already claimed) wins, so the
+# GEMM layer composes with both dedicated GEMM meshes (("rows", "cols"))
+# and the production LM meshes above (("data", "model")) without anyone
+# hand-threading axis names.
+DEFAULT_GEMM_RULES: dict = {
+    "gemm_m": ("rows", "m", "x", "data", "pod"),
+    "gemm_n": ("cols", "n", "y", "model"),
+}
+
+
+def gemm_mesh_axes(mesh: Mesh,
+                   m_axis: Optional[str] = None,
+                   n_axis: Optional[str] = None,
+                   rules: Optional[Mapping[str, Sequence[str]]] = None,
+                   ) -> tuple:
+    """Name the (M, N) mesh axes of a 2-D GEMM distribution.
+
+    Resolution mirrors ``ShardingRules``: logical axes ("gemm_m",
+    "gemm_n") map to mesh axes through a rule table, axes absent from the
+    mesh are dropped, and a mesh axis is consumed at most once.  Explicit
+    ``m_axis``/``n_axis`` arguments win outright; otherwise the first
+    rule candidate present in the mesh is chosen, falling back to mesh
+    declaration order.  A 1-axis mesh yields ``(axis, None)`` — the
+    degenerate pure-row-sharded topology.
+    """
+    tbl = dict(DEFAULT_GEMM_RULES)
+    if rules:
+        tbl.update(rules)
+    names = list(mesh.axis_names)
+    for ax, which in ((m_axis, "m_axis"), (n_axis, "n_axis")):
+        if ax is not None and ax not in names:
+            raise ValueError(f"{which}={ax!r} is not a mesh axis of "
+                             f"{tuple(names)}")
+
+    def pick(logical: str, taken: set) -> Optional[str]:
+        for cand in tbl.get(logical, ()):
+            if cand in names and cand not in taken:
+                return cand
+        for cand in names:  # fall back to mesh declaration order
+            if cand not in taken:
+                return cand
+        return None
+
+    m_ax = m_axis or pick("gemm_m", {n_axis} if n_axis else set())
+    if n_axis is not None:
+        n_ax = n_axis
+    else:
+        n_ax = pick("gemm_n", {m_ax}) if len(names) > 1 else None
+    if m_ax is not None and m_ax == n_ax:
+        raise ValueError(f"M and N cannot share mesh axis {m_ax!r}")
+    return m_ax, n_ax
 
 
 @dataclasses.dataclass(frozen=True)

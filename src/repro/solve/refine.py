@@ -20,8 +20,10 @@ has the cost model).
 
 The residual is a single engine call per iteration: ``execute(plan, A, x,
 alpha=-1, beta=1, c=b)`` rides the fused alpha/beta epilogue, the batched
-(vmap) multi-RHS path, and mesh row-sharding exactly like every other
-GEMM in the repo.  Everything per-iteration is jit-compiled once per
+(vmap) multi-RHS path, and 2-D SUMMA mesh sharding (a ``mesh=`` override
+distributes rows over ``shard_axis`` and RHS columns over
+``shard_axis_n`` — batched + sharded composes in the same call) exactly
+like every other GEMM in the repo.  Everything per-iteration is jit-compiled once per
 (plan, tier) — pivots are traced JAX arrays end-to-end, so the pivoted
 correction solve lives inside the same jit as the update.
 """
@@ -391,7 +393,8 @@ def rgesv(a, b, *, factor_tier: str = "f64",
 
     ``a``: (n, n) — an f64 array or a dd/qd value; ``b``: (n,), (n, nrhs),
     or batched (..., n, nrhs) (the residual GEMM rides the engine's
-    vmapped path; a ``mesh=`` override row-shards it).  The system is
+    vmapped path; a ``mesh=`` override distributes it SUMMA-style over a
+    1-D or 2-D device mesh, composing with batching in the same call).  The system is
     factored once at ``factor_tier`` (f64 | dd | qd); each iteration
     computes r = b - A x at ``target_tier`` (default: the tier of ``a``,
     or dd for plain arrays) as ONE engine call and back-substitutes the

@@ -6,6 +6,12 @@ bounds.  Shapes include non-square and odd-K cases, so padding/clamping
 in the engine is exercised at both limb counts; the alpha/beta cells run
 the full Rgemm epilogue with non-representable tier scalars (1/3, -1/7).
 
+The SUMMA axis runs the same product conformance over mesh topologies
+(1x1, 1xN, Nx1, 2x2 — the 2-D SUMMA distribution layer) against the
+qd-direct oracle at both tiers, plus the epilogue/batched cells; cells
+needing more devices than the process has skip, and CI's ``sharding`` job
+forces 4 host devices so every cell runs.
+
 The solver axis extends the same discipline to ``repro.solve``: every
 (factor_tier x target_tier) rung combination, on the plain, batched and
 row-sharded multi-RHS paths, is conformance-checked against a qd-direct
@@ -217,6 +223,79 @@ def test_escalation_fires_exactly_on_stagnation(tmp_cache):
     it = info.escalations[0]["iteration"]
     assert berrs[it - 1] > 0.25 * berrs[it - 2]
     assert all(berrs[i] <= 0.25 * berrs[i - 1] for i in range(2, it - 1))
+
+
+# --------------------------------------------------------------------------
+# SUMMA axis: mesh topologies vs the qd-direct oracle, dd and qd
+# --------------------------------------------------------------------------
+
+# (rows, cols) topologies; cells needing more devices than the process has
+# skip (CI's `sharding` job forces 4 host devices so every cell runs)
+_MESHES = [(1, 1), (1, 2), (2, 1), (2, 2)]
+
+
+def _mesh(rows: int, cols: int):
+    from jax.sharding import Mesh
+
+    if jax.device_count() < rows * cols:
+        pytest.skip(f"needs {rows * cols} devices, have {jax.device_count()}")
+    return Mesh(np.array(jax.devices()[: rows * cols]).reshape(rows, cols),
+                ("rows", "cols"))
+
+
+@pytest.mark.sharding
+@pytest.mark.parametrize("rows,cols", _MESHES)
+@pytest.mark.parametrize("precision", ["dd", "qd"])
+def test_summa_matches_qd_direct_oracle(rows, cols, precision, tmp_cache):
+    mesh = _mesh(rows, cols)
+    m, k, n = 13, 23, 9  # odd everything: every dim pads against the mesh
+    a = _rand(precision, (m, k), seed=60)
+    b = _rand(precision, (k, n), seed=61)
+    # qd-direct product: the most accurate GEMM the repo can produce —
+    # climbing to qd is exact, so this bounds the dd cells' true error too
+    want = qdgemm_ref(mp.promote(a, "qd"), mp.promote(b, "qd"))
+    got = gemm.matmul(a, b, backend="xla", mesh=mesh, k_panel=8)
+    assert mp.precision_of(got) == precision
+    assert _rel_err(mp.promote(got, "qd"), want) < 16 * k * ULP[precision]
+
+
+@pytest.mark.sharding
+@pytest.mark.parametrize("rows,cols", _MESHES)
+def test_summa_epilogue_and_batch_match_oracle(rows, cols, tmp_cache):
+    mesh = _mesh(rows, cols)
+    m, k, n = 13, 23, 9
+    a = _rand("dd", (2, m, k), seed=62)  # batched + sharded, one call
+    b = _rand("dd", (k, n), seed=63)
+    c = _rand("dd", (m, n), seed=64)
+    one = mp.from_float(jnp.asarray(1.0), "dd")
+    third = mp.div(one, mp.from_float(jnp.asarray(3.0), "dd"))
+    m7th = mp.div(mp.neg(one), mp.from_float(jnp.asarray(7.0), "dd"))
+    got = rgemm("n", "n", third, a, b, m7th, c, backend="xla", mesh=mesh)
+    assert got.shape == (2, m, n)
+    for i in range(2):
+        prod = ddgemm_ref(a[i], b)
+        want = mp.add(mp.mul(mp.broadcast_to(third, prod.shape), prod),
+                      mp.mul(mp.broadcast_to(m7th, c.shape), c))
+        assert _rel_err(got[i], want) < 16 * k * ULP["dd"]
+
+
+@pytest.mark.solver
+@pytest.mark.sharding
+def test_solver_multi_rhs_on_2d_mesh(solver_oracle, tmp_cache):
+    # refined solves ride the SUMMA layer: batched multi-RHS residuals on
+    # a 2-axis mesh (rows x RHS columns) through one engine call per step
+    a, b, x_oracle = solver_oracle
+    rows = 2 if jax.device_count() >= 2 else 1
+    cols = 2 if jax.device_count() >= 4 else 1
+    mesh = _mesh(rows, cols)
+    got, info = rgesv(a, np.stack([b, 2.0 * b]), factor_tier="f64",
+                      target_tier="dd", backend="xla", mesh=mesh)
+    assert info.converged, info.backward_errors
+    cells = [(got[0], x_oracle),
+             (got[1], mp.mul_float(x_oracle, jnp.float64(2.0)))]
+    for x, want in cells:
+        assert _rel_err(mp.promote(x, "qd"), want) < \
+            64 * _SOLVER_N * ULP["dd"]
 
 
 def test_qd_tiles_tune_independently(tmp_cache):
