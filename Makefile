@@ -2,9 +2,9 @@
 
 PY ?= python
 
-.PHONY: tier1 test-fast conformance solver-gates sharding-tests bench \
-	bench-gemm bench-gemm-mesh bench-smoke bench-accuracy bench-lu tune \
-	ozaki-tune
+.PHONY: tier1 test-fast conformance solver-gates sharding-tests \
+	chaos-tests bench bench-gemm bench-gemm-mesh bench-smoke \
+	bench-accuracy bench-lu tune ozaki-tune
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -32,6 +32,16 @@ solver-gates:
 sharding-tests:
 	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
 	PYTHONPATH=src $(PY) -m pytest -x -q -m sharding
+
+# deterministic fault-injection suite (CI's chaos job): every FaultPlan
+# injection class — limb flip, NaN/Inf poison, cache corruption, SUMMA
+# panel loss, mid-refinement kill, backend failure — must end in a typed
+# hazard error or an oracle-conformant recovered result.  Forced host
+# devices so the panel-loss cells run on a real 2x2 mesh; writes
+# CHAOS_REPORT.json (the hazard-report artifact CI uploads)
+chaos-tests:
+	XLA_FLAGS="$(XLA_FLAGS) --xla_force_host_platform_device_count=4" \
+	PYTHONPATH=src $(PY) -m pytest -x -q -m chaos
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run

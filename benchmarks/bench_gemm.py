@@ -25,7 +25,7 @@ from repro.core import dd, mp, ozaki
 from repro.core.accuracy import max_rel_err
 from repro.core.gemm import matmul
 from repro.kernels.ref import ddgemm_ref, qdgemm_ref
-from .common import block, dump_json, emit, rand_dd, time_fn
+from .common import block, dump_json, emit, rand_dd, record_failure, time_fn
 
 # bf16-sliced conformance floor is coarser than the f64-limb backends'
 _SMOKE_TOL = {"dd": 2.0 ** -88, "qd": 2.0 ** -185}
@@ -58,23 +58,57 @@ def _smoke():
             [(be, "qd") for be in ("ozaki-pallas", "xla", "pallas", "ref")]
     failures = []
     for backend, precision in cells:
-        a = _rand_tier(precision, (n, n), 1)
-        b = _rand_tier(precision, (n, n), 2)
-        want = ref[precision](a, b)
-        # the conformance call doubles as the timing warmup: interpret-mode
-        # cells are slow enough that a third execution per cell matters
-        got = block(matmul(a, b, backend=backend))
-        err = max_rel_err(got, want)
-        ok = err < n * _SMOKE_TOL[precision]
-        t = time_fn(lambda: block(matmul(a, b, backend=backend)),
-                    warmup=0, iters=1)
-        emit(f"gemm_smoke/{backend}/{precision}/n={n}", t * 1e6,
-             f"gflops={flops / t / 1e9:.4f};rel_err={err:.3e};conforms={ok}")
-        if not ok:
-            failures.append((backend, precision, err))
+        try:
+            a = _rand_tier(precision, (n, n), 1)
+            b = _rand_tier(precision, (n, n), 2)
+            want = ref[precision](a, b)
+            # the conformance call doubles as the timing warmup:
+            # interpret-mode cells are slow enough that a third execution
+            # per cell matters
+            got = block(matmul(a, b, backend=backend))
+            err = max_rel_err(got, want)
+            ok = err < n * _SMOKE_TOL[precision]
+            t = time_fn(lambda: block(matmul(a, b, backend=backend)),
+                        warmup=0, iters=1)
+            emit(f"gemm_smoke/{backend}/{precision}/n={n}", t * 1e6,
+                 f"gflops={flops / t / 1e9:.4f};rel_err={err:.3e};"
+                 f"conforms={ok}")
+            if not ok:
+                failures.append((backend, precision, err))
+        except Exception as e:  # noqa: BLE001 — one dead cell must not
+            # erase the other cells' rows from the artifact
+            record_failure(f"gemm_smoke/{backend}/{precision}/n={n}", e)
+            failures.append((backend, precision, f"crashed: {e}"))
+    _guard_overhead()
     dump_json("BENCH_GEMM.json", prefix="gemm_")
     if failures:
         raise SystemExit(f"smoke conformance failures: {failures}")
+
+
+def _guard_overhead():
+    """check="finite" cost vs check="none" on the smoke cells.
+
+    Emits the overhead fraction per backend so CI tracks the guarded
+    mode's dispatch cost (acceptance: <= 0.15 on these cells; the flags
+    ride inside the same jit, so the cost is a few reductions + the
+    host-side flag reads).
+    """
+    n = 24
+    a, b = _rand_tier("dd", (n, n), 1), _rand_tier("dd", (n, n), 2)
+    for backend in ("ozaki", "xla"):
+        try:
+            for chk in ("none", "finite"):  # warm both specializations
+                block(matmul(a, b, backend=backend, check=chk))
+            t0 = time_fn(lambda: block(matmul(a, b, backend=backend,
+                                              check="none")),
+                         warmup=1, iters=5)
+            t1 = time_fn(lambda: block(matmul(a, b, backend=backend,
+                                              check="finite")),
+                         warmup=1, iters=5)
+            emit(f"gemm_guard/{backend}/dd/n={n}", t1 * 1e6,
+                 f"overhead={(t1 - t0) / t0:.4f};base_us={t0 * 1e6:.1f}")
+        except Exception as e:  # noqa: BLE001
+            record_failure(f"gemm_guard/{backend}/dd/n={n}", e)
 
 
 def _mesh_sweep(mesh_arg: str):

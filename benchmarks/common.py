@@ -35,6 +35,20 @@ def emit(name: str, us_per_call: float, derived: str):
     print(row, flush=True)
 
 
+def record_failure(name: str, error: BaseException) -> None:
+    """Record a crashed bench cell as a structured row and keep sweeping.
+
+    The row lands in the same JSON artifact as timings —
+    ``{"name": ..., "error": "ExcType: msg"}`` — so a perf trajectory
+    survives one bad cell (the cells after it still run and upload) and
+    the regression tooling sees WHICH cell died instead of an empty
+    artifact.
+    """
+    msg = f"{type(error).__name__}: {error}"
+    RESULTS.append({"name": name, "error": msg[:500]})
+    print(f"# FAILED {name}: {msg}", flush=True)
+
+
 def dump_json(path: str, prefix: str | None = None) -> str:
     """Write the rows emitted so far (optionally name-filtered) as JSON.
 

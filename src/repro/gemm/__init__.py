@@ -20,17 +20,27 @@ tier tunes its own tiles.  See DESIGN.md §4 (flow), §8 (precision
 ladder), and §9 (MXU-resident Ozaki slicing).
 """
 
-from .plan import BACKENDS, PRECISIONS, GemmPlan, make_plan, \
-    replan_precision, resolve_backend
+from .plan import BACKENDS, FALLBACK_CHAINS, PRECISIONS, GemmPlan, \
+    fallback_chain, make_plan, replan_precision, resolve_backend
 from .engine import execute, matmul
 from .autotune import autotune, candidate_blocks, vmem_bytes
-from .cache import PlanCache, batch_bucket, cache_key, default_cache, \
-    set_default_cache, shape_bucket
+from .cache import PlanCache, batch_bucket, cache_key, clear_quarantine, \
+    default_cache, quarantine, quarantined, set_default_cache, shape_bucket
+from .guard import CHECKS, resolve_check
+# the hazard taxonomy lives in runtime.faults (it spans GEMM and solver
+# layers); re-exported here because GEMM callers meet it first
+from repro.runtime.faults import BackendExecutionError, \
+    BackendFailoverWarning, NumericalHazardError, SliceOverflowError
 
 __all__ = [
-    "BACKENDS", "PRECISIONS", "GemmPlan", "make_plan", "replan_precision",
-    "resolve_backend", "execute", "matmul",
+    "BACKENDS", "FALLBACK_CHAINS", "PRECISIONS", "GemmPlan", "make_plan",
+    "replan_precision", "resolve_backend", "fallback_chain",
+    "execute", "matmul",
     "autotune", "candidate_blocks", "vmem_bytes",
     "PlanCache", "batch_bucket", "cache_key", "default_cache",
     "set_default_cache", "shape_bucket",
+    "CHECKS", "resolve_check",
+    "quarantine", "quarantined", "clear_quarantine",
+    "NumericalHazardError", "SliceOverflowError", "BackendExecutionError",
+    "BackendFailoverWarning",
 ]

@@ -24,13 +24,23 @@ import json
 import os
 import tempfile
 import threading
+import time
 import warnings
 from typing import Optional
 
 __all__ = ["PlanCache", "default_cache", "set_default_cache", "shape_bucket",
-           "batch_bucket", "cache_key", "SCHEMA"]
+           "batch_bucket", "cache_key", "SCHEMA",
+           "quarantine_key", "quarantine", "quarantined", "clear_quarantine",
+           "QUARANTINE_TTL"]
 
 _ENV_VAR = "REPRO_GEMM_CACHE"
+
+# how long a quarantined backend stays benched (seconds).  A lowering
+# failure is usually environmental (missing Mosaic support, an OOM-prone
+# driver) and those heal across upgrades/reboots, not within a run — one
+# day keeps a doomed backend from being re-attempted by every process on
+# the box while still self-healing without manual cache surgery.
+QUARANTINE_TTL = float(os.environ.get("REPRO_QUARANTINE_TTL", 86400.0))
 
 # entry-schema version, embedded in every key.  v2: entries may carry an
 # ``n_slices`` field (tuned alongside the blocks for the ozaki-pallas
@@ -130,18 +140,51 @@ class PlanCache:
             data = self._load()
             data[key] = dict(entry)
             os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-            fd, tmp = tempfile.mkstemp(
-                dir=os.path.dirname(self.path) or ".", suffix=".tmp")
+            self._write_locked(data)
+
+    def _write_locked(self, data: dict) -> None:
+        """Atomically replace the cache file with ``data`` (lock held).
+
+        Write-temp + ``os.replace`` in the destination directory, with an
+        fsync before the rename: a writer killed at ANY point leaves
+        either the old complete file or the new complete file — never a
+        truncation — and a crash right after the rename cannot surface a
+        zero-length file from an unflushed page cache.  The chaos suite's
+        killed-writer injection asserts exactly this.
+        """
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(self.path) or ".", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
             try:
-                with os.fdopen(fd, "w") as f:
-                    json.dump(data, f, indent=1, sort_keys=True)
-                os.replace(tmp, self.path)
-            except BaseException:
-                try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
-                raise
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def drop_prefix(self, prefix: str) -> int:
+        """Remove every entry whose key starts with ``prefix``; persist.
+
+        The quarantine lifecycle's release valve: ``clear_quarantine``
+        drops the ``quarantine/`` namespace without touching tuned blocks.
+        Returns the number of entries dropped.
+        """
+        with self._lock:
+            self._mem = None
+            data = self._load()
+            doomed = [k for k in data if k.startswith(prefix)]
+            for k in doomed:
+                del data[k]
+            if doomed:
+                os.makedirs(os.path.dirname(self.path) or ".",
+                            exist_ok=True)
+                self._write_locked(data)
+            return len(doomed)
 
     def clear(self) -> None:
         with self._lock:
@@ -177,3 +220,60 @@ def set_default_cache(cache: Optional[PlanCache]) -> None:
     with _default_lock:
         _default = cache
         _default_explicit = cache is not None
+
+
+# --------------------------------------------------------------------------
+# backend quarantine: failed backends benched in the same cache file
+# --------------------------------------------------------------------------
+#
+# When a kernel backend fails at compile/run time the engine fails over
+# down the plan's fallback chain — but re-attempting the doomed backend on
+# every call re-pays the (often seconds-long) lowering failure.  The
+# quarantine records "backend X is broken on platform P at N limbs" in the
+# same JSON the tuner writes, so repeat calls (and fresh processes) skip
+# the attempt at *plan* time.  Entries carry the failure reason and a
+# timestamp; they expire after QUARANTINE_TTL so an upgraded toolchain
+# heals without manual intervention.  Namespaced under ``quarantine/v1``
+# so ``clear_quarantine`` can drop them without touching tuned blocks.
+
+_QUAR_PREFIX = "quarantine/v1"
+
+
+def quarantine_key(platform: str, backend: str, nlimbs: int = 2) -> str:
+    """Quarantine entries key coarser than tuning entries: a backend that
+    cannot lower for (platform, limb count) is broken for every shape."""
+    return f"{_QUAR_PREFIX}/{platform}/{backend}/x{nlimbs}"
+
+
+def quarantine(platform: str, backend: str, nlimbs: int = 2, *,
+               reason: str = "", cache: Optional[PlanCache] = None) -> None:
+    """Bench a backend for (platform, limb count) for QUARANTINE_TTL."""
+    (cache or default_cache()).put(
+        quarantine_key(platform, backend, nlimbs),
+        {"reason": str(reason)[:500], "unix_time": time.time()})
+
+
+def quarantined(platform: str, backend: str, nlimbs: int = 2, *,
+                cache: Optional[PlanCache] = None) -> Optional[dict]:
+    """The live quarantine entry for a backend, or None.
+
+    Expired entries answer None (they are left on disk; the next
+    ``quarantine``/``clear_quarantine`` write compacts them).
+    """
+    entry = (cache or default_cache()).get(
+        quarantine_key(platform, backend, nlimbs))
+    if not entry:
+        return None
+    try:
+        age = time.time() - float(entry.get("unix_time", 0.0))
+    except (TypeError, ValueError):
+        return None  # malformed timestamp: treat as expired, not fatal
+    if age > QUARANTINE_TTL:
+        return None
+    return entry
+
+
+def clear_quarantine(cache: Optional[PlanCache] = None) -> int:
+    """Lift every quarantine (``repro.gemm.clear_quarantine()`` is the
+    documented remedy once the environment is fixed).  Returns the count."""
+    return (cache or default_cache()).drop_prefix(_QUAR_PREFIX)

@@ -46,15 +46,30 @@ from __future__ import annotations
 
 import functools
 import math
+import os
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import mp
-from .plan import GemmPlan, make_plan, round_up as _round_up
+from repro.runtime import faults as _faults
+from repro.runtime.faults import (BackendExecutionError,
+                                  BackendFailoverWarning,
+                                  NumericalHazardError)
+
+from . import cache as plan_cache
+from . import guard
+from .plan import (GemmPlan, fallback_chain, make_plan,
+                   round_up as _round_up)
 
 __all__ = ["execute", "matmul"]
+
+# kill switch for backend failover: REPRO_GEMM_FAILOVER=0 makes a backend
+# failure raise immediately (bisection wants the original traceback, not a
+# masked recovery)
+_ENV_FAILOVER = "REPRO_GEMM_FAILOVER"
 
 
 def _pad_to(x, rows, cols):
@@ -129,6 +144,8 @@ def _execute_ozaki_pallas(plan: GemmPlan, a, b, alpha=None, beta=None,
     from .plan import _clamp_blocks
     from repro.kernels.ozgemm import ozgemm_kernel_call
 
+    _faults.poke("backend.ozaki-pallas")
+
     m, k = a.shape
     _, n = b.shape
     blk = _clamp_blocks(m, k, n, plan.blocks)
@@ -153,10 +170,13 @@ def _execute_ozaki_pallas(plan: GemmPlan, a, b, alpha=None, beta=None,
 
 
 def _execute_2d(plan: GemmPlan, a, b):
+    if plan.backend == "ozaki-pallas":
+        return _execute_ozaki_pallas(plan, a, b)  # pokes its own site
+    # chaos hook: a "backend.<name>" injection models this kernel failing
+    # to lower/run (fires at trace time, so failed traces are never cached)
+    _faults.poke("backend." + plan.backend)
     if plan.backend == "pallas":
         return _execute_pallas(plan, a, b)
-    if plan.backend == "ozaki-pallas":
-        return _execute_ozaki_pallas(plan, a, b)
     if plan.backend == "ozaki":
         if plan.precision != "dd":
             raise ValueError("ozaki backend has no qd tier (make_plan "
@@ -244,24 +264,41 @@ def _execute_batched(plan: GemmPlan, a, b, inner=None):
 # execution compiles inside shard_map as before.
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
-def _execute_2d_jit(a, b, alpha, beta, c, *, plan: GemmPlan):
-    return _apply_epilogue(_execute_2d(plan, a, b), alpha, beta, c)
+# Each wrapper returns ``(out, flags)``: the guard's hazard flags are a
+# few extra reductions traced into the SAME compiled graph (``check`` is a
+# static key, so unguarded calls compile flag-free specializations).  One
+# dispatch total — this is what keeps check="finite" inside its ≤15%
+# overhead budget; a separate probe dispatch would double the fixed cost
+# on small cells.
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
-def _execute_batched_jit(a, b, alpha, beta, c, *, plan: GemmPlan):
-    return _apply_epilogue(_execute_batched(plan, a, b), alpha, beta, c)
+@functools.partial(jax.jit, static_argnames=("plan", "check"))
+def _execute_2d_jit(a, b, alpha, beta, c, *, plan: GemmPlan,
+                    check: str = "none"):
+    out = _apply_epilogue(_execute_2d(plan, a, b), alpha, beta, c)
+    return out, guard.hazard_flags(plan, a, b, c, out, alpha, beta, check)
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
-def _execute_fused_alpha_jit(a, b, alpha, *, plan: GemmPlan):
-    return _execute_ozaki_pallas(plan, a, b, alpha=alpha)
+@functools.partial(jax.jit, static_argnames=("plan", "check"))
+def _execute_batched_jit(a, b, alpha, beta, c, *, plan: GemmPlan,
+                         check: str = "none"):
+    out = _apply_epilogue(_execute_batched(plan, a, b), alpha, beta, c)
+    return out, guard.hazard_flags(plan, a, b, c, out, alpha, beta, check)
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
-def _execute_fused_full_jit(a, b, alpha, beta, c, *, plan: GemmPlan):
-    return _execute_ozaki_pallas(plan, a, b, alpha=alpha, beta=beta, c=c)
+@functools.partial(jax.jit, static_argnames=("plan", "check"))
+def _execute_fused_alpha_jit(a, b, alpha, *, plan: GemmPlan,
+                             check: str = "none"):
+    out = _execute_ozaki_pallas(plan, a, b, alpha=alpha)
+    return out, guard.hazard_flags(plan, a, b, None, out, alpha, None,
+                                   check)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "check"))
+def _execute_fused_full_jit(a, b, alpha, beta, c, *, plan: GemmPlan,
+                            check: str = "none"):
+    out = _execute_ozaki_pallas(plan, a, b, alpha=alpha, beta=beta, c=c)
+    return out, guard.hazard_flags(plan, a, b, c, out, alpha, beta, check)
 
 
 # --------------------------------------------------------------------------
@@ -405,6 +442,12 @@ def _summa_runner(plan: GemmPlan, m: int, k: int, n: int, nl: int):
                 bl)
             apan = bcast(apan, own_a, ci, ax_n)
             bpan = bcast(bpan, own_b, ri, ax_m)
+            # chaos hooks: a "summa.panel.*" injection zeroes the chosen
+            # K-step's broadcast panel (a lost shard contribution); inert
+            # identity without an armed FaultPlan, and inject() drops the
+            # _summa_runner_jit cache so faulty traces stay in scope
+            apan = _faults.zero_panel("summa.panel.a", apan, t)
+            bpan = _faults.zero_panel("summa.panel.b", bpan, t)
             acc = mp.add(acc, _execute_2d(plan, apan, bpan))
             return tuple(mp.limbs(acc))
 
@@ -460,11 +503,122 @@ def _execute_sharded(plan: GemmPlan, a, b):
 
 
 # --------------------------------------------------------------------------
+# dispatch + failover
+# --------------------------------------------------------------------------
+
+
+def _dispatch_once(plan: GemmPlan, a, b, alpha, beta, c, batched: bool,
+                   sharded: bool, check: str):
+    """Route one (validated) workload to its path; return (out, flags)."""
+    if batched and not sharded:
+        return _execute_batched_jit(a, b, alpha, beta, c, plan=plan,
+                                    check=check)
+    if sharded:
+        # _execute_sharded routes batched operands through vmap-outside-
+        # shard_map itself, so batched + sharded is one engine call
+        out = _execute_sharded(plan, a, b)
+        if alpha is not None or c is not None:
+            out = _apply_epilogue_jit(out, alpha, beta, c)
+        flags = None
+        if check != "none":
+            # the SUMMA runner compiles outside the plan-keyed wrappers
+            # (plan hash excludes the mesh), so guarding it costs one
+            # extra eager probe dispatch — accepted: multi-device calls
+            # are large enough to amortize it
+            flags = guard.probe(a, b, c, out, alpha, beta, plan=plan,
+                                check=check)
+        return out, flags
+    if alpha is not None and plan.backend == "ozaki-pallas":
+        # fused drain: the epilogue runs in VMEM before the C' tile drains
+        if c is None:
+            return _execute_fused_alpha_jit(a, b, alpha, plan=plan,
+                                            check=check)
+        return _execute_fused_full_jit(a, b, alpha, beta, c, plan=plan,
+                                       check=check)
+    return _execute_2d_jit(a, b, alpha, beta, c, plan=plan, check=check)
+
+
+def _fallback_plan(plan: GemmPlan, backend: str, m: int, k: int,
+                   n: int) -> GemmPlan:
+    """Re-plan the same workload onto a fallback backend.
+
+    Structural parameters (tier, platform, mesh, batch shape, check) carry
+    over; backend-specific ones (blocks, slice params) re-solve for the
+    new backend.  ``use_cache=False``: the failover path must not consult
+    the quarantine it is itself writing, and a tuned-tile lookup is not
+    worth a second cache read on an error path.
+    """
+    return make_plan(
+        m, k, n, dtype=plan.limb_dtype, precision=plan.precision,
+        backend=backend, batch_shape=plan.batch_shape,
+        interpret=plan.interpret, platform=plan.platform, mesh=plan.mesh,
+        shard_axis=plan.shard_axis, shard_axis_n=plan.shard_axis_n,
+        k_panel=plan.k_panel, check=plan.check, use_cache=False)
+
+
+def _dispatch_with_failover(plan: GemmPlan, a, b, alpha, beta, c,
+                            batched: bool, sharded: bool, check: str):
+    """Dispatch, retrying down the plan's fallback chain on backend failure.
+
+    Returns ``(out, flags, used_plan)``.  Failure semantics:
+
+      * backends with an EMPTY chain (xla, ref, unknown) dispatch bare —
+        their exceptions re-raise unchanged (failover must not reword the
+        engine's own diagnostics, and 'xla' failing means the problem is
+        not the backend);
+      * :class:`NumericalHazardError` always re-raises — it is a verdict
+        about the *data*, and a fallback backend would reach the same one;
+      * any other exception quarantines the failing backend (so repeat
+        calls skip it at plan time), warns, and retries the next rung;
+      * all rungs failing raises :class:`BackendExecutionError` carrying
+        every ``(backend, error)`` attempt.
+
+    ``REPRO_GEMM_FAILOVER=0`` disables the whole mechanism (bisection
+    wants the original traceback).
+    """
+    chain = fallback_chain(plan.backend, plan.precision)
+    if not chain or os.environ.get(_ENV_FAILOVER, "1") == "0":
+        out, flags = _dispatch_once(plan, a, b, alpha, beta, c, batched,
+                                    sharded, check)
+        return out, flags, plan
+    m, k = a.shape[-2:]
+    n = b.shape[-1]
+    attempts = []
+    cur = plan
+    for nxt in chain + (None,):
+        try:
+            out, flags = _dispatch_once(cur, a, b, alpha, beta, c,
+                                        batched, sharded, check)
+            return out, flags, cur
+        except NumericalHazardError:
+            raise
+        except Exception as e:  # noqa: BLE001 — failover IS the handler
+            attempts.append((cur.backend, repr(e)))
+            plan_cache.quarantine(cur.platform, cur.backend, cur.nlimbs,
+                                  reason=repr(e))
+            if nxt is None:
+                break
+            warnings.warn(
+                f"GEMM backend {cur.backend!r} failed "
+                f"({type(e).__name__}: {e}); quarantined for "
+                f"{plan_cache.QUARANTINE_TTL:.0f}s, failing over to "
+                f"{nxt!r}", BackendFailoverWarning, stacklevel=3)
+            cur = _fallback_plan(plan, nxt, m, k, n)
+    raise BackendExecutionError(
+        f"every backend in the fallback chain failed for this "
+        f"{plan.precision} GEMM: "
+        + "; ".join(f"{be}: {err}" for be, err in attempts)
+        + " (REPRO_GEMM_FAILOVER=0 re-raises the first failure directly)",
+        attempts=tuple(attempts))
+
+
+# --------------------------------------------------------------------------
 # public entry points
 # --------------------------------------------------------------------------
 
 
-def execute(plan: GemmPlan, a, b, *, alpha=None, beta=None, c=None):
+def execute(plan: GemmPlan, a, b, *, alpha=None, beta=None, c=None,
+            check: Optional[str] = None):
     """Run C = alpha * (A @ B) + beta * C under a plan.
 
     A: (..., m, k), B: (..., k, n).  ``alpha``/``beta`` (python floats or
@@ -476,7 +630,24 @@ def execute(plan: GemmPlan, a, b, *, alpha=None, beta=None, c=None):
     beta: ``beta == 0`` means C is **not read** (NaN/Inf in C cannot
     leak), and a nonzero beta without ``c=`` raises rather than being
     silently dropped.
+
+    ``check`` selects the guarded-execution level (defaults to the plan's
+    ``check`` field): ``"none"`` propagates hazards IEEE-style, zero
+    overhead; ``"finite"`` raises a typed
+    :class:`~repro.runtime.faults.NumericalHazardError` /
+    :class:`~repro.runtime.faults.SliceOverflowError` naming the offending
+    operand on NaN/Inf input-or-output or sliced-backend operand overflow;
+    ``"full"`` additionally validates the result against an f64 shadow
+    product (catches finite-but-wrong results — flipped limbs, lost SUMMA
+    panels).  Guarded raising degrades to propagation under an outer jit
+    (flags are tracers there); see ``gemm.guard``.
+
+    Backend compile/run failures retry down the plan's declared fallback
+    chain (``ozaki-pallas → ozaki → xla``), quarantining each failed
+    backend in the plan cache; exhaustion raises
+    :class:`~repro.runtime.faults.BackendExecutionError`.
     """
+    check = guard.resolve_check(check, plan)
     prec = mp.precision_of(a)
     if mp.precision_of(b) != prec:
         raise TypeError(f"operand tiers differ: {mp.precision_of(a)} vs "
@@ -526,21 +697,32 @@ def execute(plan: GemmPlan, a, b, *, alpha=None, beta=None, c=None):
         raise ValueError(
             "plan was made for 2-D operands but inputs have batch dims; "
             "rebuild with batch_shape= (engine.matmul does this)")
-    if batched and not sharded:
-        return _execute_batched_jit(a, b, alpha, beta, c, plan=plan)
-    if sharded:
-        # _execute_sharded routes batched operands through vmap-outside-
-        # shard_map itself, so batched + sharded is one engine call
-        out = _execute_sharded(plan, a, b)
-        if alpha is None and c is None:
-            return out
-        return _apply_epilogue_jit(out, alpha, beta, c)
-    if alpha is not None and plan.backend == "ozaki-pallas":
-        # fused drain: the epilogue runs in VMEM before the C' tile drains
-        if c is None:
-            return _execute_fused_alpha_jit(a, b, alpha, plan=plan)
-        return _execute_fused_full_jit(a, b, alpha, beta, c, plan=plan)
-    return _execute_2d_jit(a, b, alpha, beta, c, plan=plan)
+    if _faults.active():
+        # chaos hooks run EAGERLY, outside the plan-keyed jit wrappers —
+        # corrupting inside a traced body would cache the corrupted graph
+        # under the plan key and leak the fault past its FaultPlan
+        a = _faults.corrupt("gemm.a", a)
+        b = _faults.corrupt("gemm.b", b)
+        if c is not None:
+            c = _faults.corrupt("gemm.c", c)
+    out, flags, used = _dispatch_with_failover(
+        plan, a, b, alpha, beta, c, batched, sharded, check)
+    if _faults.active():
+        out2 = _faults.corrupt("gemm.out", out)
+        if out2 is not out:
+            # the in-graph flags saw the clean product; re-probe the
+            # corrupted one eagerly so the guard judges what the caller
+            # will actually receive
+            out = out2
+            if check != "none":
+                flags = guard.probe(a, b, c, out, alpha, beta, plan=used,
+                                    check=check)
+    shapes = {"A": tuple(a.shape), "B": tuple(b.shape),
+              "output": tuple(out.shape)}
+    if c is not None:
+        shapes["C"] = tuple(c.shape)
+    guard.raise_on_flags(flags, used, check, shapes)
+    return out
 
 
 def matmul(a, b, *, plan: Optional[GemmPlan] = None, alpha=None, beta=None,

@@ -1,0 +1,246 @@
+"""Guarded execution: numerical-hazard checks for the GEMM engine.
+
+The engine's default contract is IEEE-style *propagation*: a NaN in an
+operand flows through tier arithmetic into the product, exactly as the
+paper's FPGA datapath would stream it.  That is the right default for a
+kernel — and the wrong one for a serving stack, where a silent NaN in one
+SDP constraint poisons a whole barrier step.  This module implements the
+opt-in check ladder ``execute(..., check=...)`` / ``GemmPlan.check``:
+
+``"none"``
+    the historical contract — hazards propagate, zero overhead.
+
+``"finite"``
+    validates operands and output for NaN/Inf, and — for the Ozaki sliced
+    backends — operand magnitudes against the slice-extraction anchor
+    range (:class:`~repro.runtime.faults.SliceOverflowError`; overflow
+    there corrupts slices *silently*, producing finite-looking garbage).
+    Raises :class:`~repro.runtime.faults.NumericalHazardError` naming the
+    offending operand and first bad index.
+
+``"full"``
+    everything ``"finite"`` does, plus a **shadow product**: the f64
+    projection of the operands is multiplied in plain float64 and the
+    guarded result's projection must agree to within the f64 error bound
+    scaled by ``_SHADOW_RTOL``.  This is the only check that can see
+    *finite but wrong* results — a flipped limb, a lost SUMMA panel — at
+    the cost of one f64 GEMM (~1/16 the flops of a qd product, ~1/4 of
+    dd).  Sub-f64 corruption (a low-limb flip) is below the shadow's
+    resolution and documented as undetectable here; the refinement
+    solver's residual gates own that band.
+
+Design: flag *computation* (:func:`hazard_flags`) is pure traced jnp and
+runs **inside** the engine's plan-keyed jit wrappers — one dispatch total,
+which is what keeps the ``check="finite"`` overhead inside the ≤15%
+acceptance budget.  Flag *interpretation* (:func:`raise_on_flags`) is
+host-side and eager; under an outer ``jit`` (e.g. the refinement solver's
+residual step) the flags are tracers, raising is impossible, and the check
+degrades to propagation — callers that need hard guarantees run eagerly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mp
+from repro.runtime.faults import NumericalHazardError, SliceOverflowError
+
+from .plan import GemmPlan
+
+__all__ = ["CHECKS", "resolve_check", "hazard_flags", "probe",
+           "raise_on_flags", "slice_overflow_limit"]
+
+CHECKS = ("none", "finite", "full")
+
+# shadow-product agreement: |f64(out) - shadow| <= bound * _SHADOW_RTOL
+# where bound is the elementwise f64 forward-error envelope |A||B| + |bC|.
+# 2^-35 sits ~18 bits above f64's unit roundoff (the shadow's own error is
+# O(k * 2^-53) * bound, k <= ~2^14 in our test envelope) and ~18 bits of
+# margin below any real fault a whole-limb upset can cause (the smallest
+# modelled fault flips limb 0 by one exponent bit: a relative error of
+# O(1)).  False positives and false negatives both need ~2^17 of slack to
+# cross it.
+_SHADOW_RTOL = 2.0 ** -35
+
+
+def resolve_check(check: Optional[str], plan: GemmPlan) -> str:
+    """Effective check level: explicit argument > plan field > "none"."""
+    c = check if check is not None else getattr(plan, "check", "none")
+    if c not in CHECKS:
+        raise ValueError(f"unknown check level {c!r}; one of {CHECKS}")
+    return c
+
+
+def slice_overflow_limit(plan: GemmPlan) -> Optional[float]:
+    """Largest |entry| the Ozaki slice extraction can anchor without
+    overflow, or None when the plan's backend does not slice.
+
+    ExtractVector's anchor is ``sigma = 2^(e_mu + p - beta)`` for operand
+    magnitude ``2^e_mu``, limb-significand width ``p``, and slice width
+    ``beta``; sigma must stay finite, so ``e_mu <= E_max - (p - beta)``.
+    One extra octave is reserved because the ``x + sigma`` sum can carry
+    into ``2^(e_sigma + 1)``.
+    """
+    if plan.slice_beta is None:
+        return None
+    finfo = jnp.finfo(jnp.dtype(plan.limb_dtype))
+    # e_mu_max = E_max - 1 - (p - beta); anchor ladder uses p = nmant + 1
+    exp = finfo.maxexp - 2 - (finfo.nmant + 1 - plan.slice_beta)
+    return float(2.0 ** exp)
+
+
+def _nonfinite_flags(name: str, x, flags: dict) -> None:
+    """Fold per-operand NaN/Inf counts + first-bad-flat-index into flags."""
+    nan = jnp.zeros((), jnp.int64)
+    inf = jnp.zeros((), jnp.int64)
+    bad = None
+    for l in mp.limbs(x):
+        nan = nan + jnp.sum(jnp.isnan(l), dtype=jnp.int64)
+        inf = inf + jnp.sum(jnp.isinf(l), dtype=jnp.int64)
+        m = ~jnp.isfinite(l)
+        bad = m if bad is None else (bad | m)
+    flags[f"{name}_nan"] = nan
+    flags[f"{name}_inf"] = inf
+    # argmax of the OR'd mask = first offending entry (0 when clean; the
+    # counts disambiguate).  Flat index — the host side unravels it.
+    flags[f"{name}_idx"] = jnp.argmax(bad.reshape(-1))
+
+
+def hazard_flags(plan: GemmPlan, a, b, c, out, alpha, beta,
+                 check: str) -> Optional[dict]:
+    """Traced flag computation for one guarded execution.
+
+    Returns a dict of scalar jnp values (or None for ``check="none"``):
+    per-operand ``{A,B,C,output}_nan`` / ``_inf`` counts and ``_idx`` first
+    offenders; ``A_amax`` / ``B_amax`` operand magnitudes when the plan
+    slices (the overflow pre-check); and for ``check="full"`` the shadow
+    ``mismatch`` ratio (worst |err| / bound over the output).  Runs inside
+    the engine's jit wrappers — adding it to an execution costs a few
+    reductions, not a second dispatch.
+    """
+    if check == "none":
+        return None
+    flags: dict = {}
+    _nonfinite_flags("A", a, flags)
+    _nonfinite_flags("B", b, flags)
+    if c is not None:
+        _nonfinite_flags("C", c, flags)
+    if slice_overflow_limit(plan) is not None:
+        flags["A_amax"] = jnp.max(jnp.abs(mp.limbs(a)[0]))
+        flags["B_amax"] = jnp.max(jnp.abs(mp.limbs(b)[0]))
+    _nonfinite_flags("output", out, flags)
+    if check == "full":
+        af, bf = mp.to_float(a), mp.to_float(b)
+        shadow = af @ bf
+        bound = jnp.abs(af) @ jnp.abs(bf)
+        if alpha is not None:
+            alf = mp.to_float(alpha)
+            shadow = alf * shadow
+            bound = jnp.abs(alf) * bound
+        if c is not None:
+            bc = mp.to_float(beta) * mp.to_float(c)
+            shadow = shadow + bc
+            bound = bound + jnp.abs(bc)
+        err = jnp.abs(mp.to_float(out) - shadow)
+        # the tiny absolute floor keeps exact-zero cells (bound == 0) from
+        # dividing 0/0; any fault big enough to matter clears it trivially
+        ratio = err / (bound + 2.0 ** -1000)
+        # a NaN/Inf anywhere makes the ratio NaN; the nonfinite flags
+        # already own that case, so the mismatch verdict masks it out
+        ratio = jnp.where(jnp.isfinite(ratio), ratio, 0.0)
+        flags["mismatch"] = jnp.max(ratio)
+        flags["mismatch_idx"] = jnp.argmax(ratio.reshape(-1))
+    return flags
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "check"))
+def probe(a, b, c, out, alpha, beta, *, plan: GemmPlan, check: str):
+    """Eagerly-dispatchable :func:`hazard_flags` (sharded / post-hoc use)."""
+    return hazard_flags(plan, a, b, c, out, alpha, beta, check)
+
+
+def _first_index(flags: dict, name: str, shape) -> Optional[tuple]:
+    idx = flags.get(f"{name}_idx")
+    if idx is None or shape is None:
+        return None
+    try:
+        return tuple(int(i) for i in np.unravel_index(int(idx), shape))
+    except ValueError:
+        return None
+
+
+def raise_on_flags(flags: Optional[dict], plan: GemmPlan, check: str,
+                   shapes: Optional[dict] = None) -> None:
+    """Interpret computed flags host-side; raise the typed hazard.
+
+    Check order is provenance order — operands before slicing before
+    output before shadow — so the error names the *cause*, not the
+    furthest-downstream symptom (a NaN in A also NaNs the output and the
+    shadow ratio; the caller must hear "A", not "mismatch").
+
+    No-op when any flag is still a tracer (guarded execute under an outer
+    jit): raising at trace time would poison every execution sharing the
+    compiled graph, so the check degrades to propagation there.
+    """
+    if flags is None or check == "none":
+        return
+    if any(isinstance(v, jax.core.Tracer) for v in flags.values()):
+        return
+    shapes = shapes or {}
+
+    def hazard(operand, kind, **kw):
+        nan = int(flags.get(f"{operand}_nan", 0))
+        inf = int(flags.get(f"{operand}_inf", 0))
+        index = _first_index(flags, operand, shapes.get(operand))
+        at = f" (first at index {index})" if index is not None else ""
+        raise NumericalHazardError(
+            f"{kind} in {operand} during guarded "
+            f"{plan.backend}/{plan.precision} GEMM: {nan} NaN / {inf} Inf "
+            f"entries{at}; check={check!r} forbids propagation — sanitize "
+            f"the operand or run with check='none' to propagate",
+            kind=kind, operand=operand, backend=plan.backend,
+            precision=plan.precision, index=index, nan_count=nan,
+            inf_count=inf, **kw)
+
+    for operand in ("A", "B", "C"):
+        if f"{operand}_nan" not in flags:
+            continue
+        if int(flags[f"{operand}_nan"]):
+            hazard(operand, "nan")
+        if int(flags[f"{operand}_inf"]):
+            hazard(operand, "inf")
+    limit = slice_overflow_limit(plan)
+    if limit is not None and "A_amax" in flags:
+        for operand in ("A", "B"):
+            amax = float(flags[f"{operand}_amax"])
+            if amax > limit:
+                raise SliceOverflowError(
+                    f"|{operand}| max {amax:.3e} exceeds the Ozaki "
+                    f"slice-extraction anchor range (limit {limit:.3e} for "
+                    f"beta={plan.slice_beta}, {plan.limb_dtype}): the "
+                    f"2^(e+p-beta) anchor overflows and corrupts every "
+                    f"slice silently — scale the operand or use a "
+                    f"non-sliced backend (xla, pallas)",
+                    kind="overflow", operand=operand, backend=plan.backend,
+                    precision=plan.precision,
+                    detail=f"amax={amax!r} limit={limit!r}")
+    if int(flags.get("output_nan", 0)) or int(flags.get("output_inf", 0)):
+        hazard("output", "nan" if int(flags["output_nan"]) else "inf")
+    mismatch = flags.get("mismatch")
+    if mismatch is not None and float(mismatch) > _SHADOW_RTOL:
+        index = _first_index(flags, "mismatch", shapes.get("output"))
+        at = f" (worst at index {index})" if index is not None else ""
+        raise NumericalHazardError(
+            f"guarded {plan.backend}/{plan.precision} GEMM disagrees with "
+            f"its f64 shadow product by {float(mismatch):.3e} of the error "
+            f"bound{at} (threshold {_SHADOW_RTOL:.1e}): the result is "
+            f"finite but wrong — suspect a corrupted limb, a lost SUMMA "
+            f"panel, or a kernel defect; retry on the 'ref' backend to "
+            f"bisect", kind="mismatch", operand="output",
+            backend=plan.backend, precision=plan.precision, index=index,
+            detail=f"ratio={float(mismatch)!r}")

@@ -32,14 +32,47 @@ import jax.numpy as jnp
 # the arithmetic layer owns the tier -> limb-count map (re-exported below
 # so plan consumers need not import core); also enables x64 on import
 from repro.core.mp import PRECISIONS
+from repro.runtime.faults import BackendFailoverWarning
 
 from . import cache as plan_cache
 
 __all__ = ["GemmPlan", "make_plan", "replan_precision", "resolve_backend",
            "round_up", "BACKENDS", "PRECISIONS", "DEFAULT_BLOCKS",
-           "OZAKI_TARGET_BITS"]
+           "OZAKI_TARGET_BITS", "FALLBACK_CHAINS", "fallback_chain"]
 
 BACKENDS = ("auto", "pallas", "ozaki", "ozaki-pallas", "xla", "ref")
+
+# guarded-execution levels (mirrored by gemm.guard.CHECKS; defined here so
+# plan validation does not import the guard module, which imports us)
+_CHECK_LEVELS = ("none", "finite", "full")
+
+# declared failover order per backend, most- to least-specialized.  The
+# chain ends at 'xla' (pure jnp — if that fails, the failure is in the
+# operands or JAX itself, and failover would only mask it); 'ref' is an
+# oracle, not a production fallback.  The engine walks this chain when a
+# backend raises at compile/run time, quarantining each failed rung; the
+# planner consults the same chain to skip quarantined backends at plan
+# time.
+FALLBACK_CHAINS = {
+    "ozaki-pallas": ("ozaki", "xla"),
+    "pallas": ("xla",),
+    "ozaki": ("xla",),
+    "xla": (),
+    "ref": (),
+}
+
+
+def fallback_chain(backend: str, precision: str = "dd"):
+    """The failover chain for a backend, tier-filtered.
+
+    The whole-K 'ozaki' path has no qd tier, so qd plans skip that rung
+    (make_plan would reject it; the engine must not fail over into a
+    ValueError).
+    """
+    chain = FALLBACK_CHAINS.get(backend, ())
+    if precision == "qd":
+        chain = tuple(b for b in chain if b != "ozaki")
+    return chain
 
 # backends that decompose operands into error-free slices; their plans
 # carry solved (slice_beta, n_slices) so kernels never re-derive them
@@ -84,6 +117,7 @@ class GemmPlan:
     slice_beta: Optional[int] = None   # ozaki bits per slice (solved)
     target_bits: Optional[int] = None  # ozaki significand coverage target
     full: Optional[bool] = None        # ozaki: keep sub-target slice products
+    check: str = "none"                # guarded execution: none|finite|full
     source: str = "heuristic"          # heuristic | tuned | override
 
     @property
@@ -134,6 +168,7 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
               n_slices: Optional[int] = None,
               target_bits: Optional[int] = None, full: Optional[bool] = None,
               chunk: Optional[int] = None,
+              check: str = "none",
               use_cache: bool = True) -> GemmPlan:
     """Plan one GEMM workload: (batch_shape) x (m, k) @ (k, n).
 
@@ -145,6 +180,9 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
     if precision not in PRECISIONS:
         raise ValueError(f"unknown precision {precision!r}; "
                          f"one of {sorted(PRECISIONS)}")
+    if check not in _CHECK_LEVELS:
+        raise ValueError(f"unknown check level {check!r}; "
+                         f"one of {_CHECK_LEVELS}")
     be = resolve_backend(backend)
     if precision == "qd" and be == "ozaki":
         if backend == "ozaki":
@@ -157,6 +195,29 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
         be = "xla"  # 'auto'/env default 'ozaki' is a dd-oriented hint
     platform = platform or jax.default_backend()
     dtype = jnp.dtype(dtype)
+
+    # quarantine consult: a backend that recently failed at compile/run
+    # time on this (platform, limb count) is benched in the plan cache —
+    # re-plan onto the first healthy rung of its fallback chain instead of
+    # re-paying the doomed lowering attempt at execute time.  use_cache=
+    # False opts out (tests and bisection need to hit the backend anyway).
+    if use_cache:
+        nl = PRECISIONS[precision]
+        q = plan_cache.quarantined(platform, be, nl)
+        if q is not None:
+            for fb in fallback_chain(be, precision):
+                if plan_cache.quarantined(platform, fb, nl) is None:
+                    warnings.warn(
+                        f"GEMM backend {be!r} is quarantined on "
+                        f"{platform!r} ({q.get('reason', '?')}); planning "
+                        f"onto fallback {fb!r} (repro.gemm."
+                        f"clear_quarantine() lifts the bench)",
+                        BackendFailoverWarning, stacklevel=2)
+                    be = fb
+                    break
+            # every rung benched: keep the original backend and let the
+            # engine's failover loop re-attempt (and re-diagnose) live
+
     if interpret is None:
         interpret = platform != "tpu"
     if chunk is not None:
@@ -262,7 +323,7 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
         slice_dtype=jnp.dtype(slice_dtype).name if slice_dtype else None,
         acc_dtype=jnp.dtype(acc_dtype).name if acc_dtype else None,
         n_slices=n_slices, slice_beta=slice_beta,
-        target_bits=target_bits, full=full,
+        target_bits=target_bits, full=full, check=check,
         source=source, **blocks)
 
 
@@ -290,4 +351,5 @@ def replan_precision(plan: GemmPlan, m: int, k: int, n: int,
         backend=backend, batch_shape=plan.batch_shape,
         interpret=plan.interpret, platform=plan.platform,
         mesh=plan.mesh, shard_axis=plan.shard_axis,
-        shard_axis_n=plan.shard_axis_n, k_panel=plan.k_panel)
+        shard_axis_n=plan.shard_axis_n, k_panel=plan.k_panel,
+        check=plan.check)

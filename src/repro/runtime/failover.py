@@ -14,10 +14,12 @@ injected delays).
 
 from __future__ import annotations
 
+import random
 import time
 from typing import Callable, Optional
 
-__all__ = ["run_with_restarts", "StepWatchdog", "SimulatedFailure"]
+__all__ = ["run_with_restarts", "restart_backoff", "StepWatchdog",
+           "SimulatedFailure"]
 
 
 class SimulatedFailure(RuntimeError):
@@ -48,16 +50,49 @@ class StepWatchdog:
         return False
 
 
+def restart_backoff(failures: int, *, base: float = 0.0, cap: float = 30.0,
+                    jitter: float = 0.1, seed: int = 0) -> float:
+    """Wait before restart attempt number ``failures`` (1-based).
+
+    Exponential with a cap — ``min(cap, base * 2^(failures-1))`` — times a
+    seeded jitter factor in ``[1, 1 + jitter]``.  The exponential spreads
+    a crash-looping job's retries out instead of hammering the shared
+    filesystem/scheduler; the jitter de-synchronizes a fleet whose members
+    all died at once (the thundering-herd restart).  Seeded (per-run, via
+    ``seed``) rather than wall-clock random so a replayed run waits the
+    same schedule — determinism is what lets the chaos suite assert the
+    exact waits.  ``base=0`` (the default) keeps the historical
+    restart-immediately behavior.
+    """
+    if base <= 0.0 or failures <= 0:
+        return 0.0
+    wait = min(cap, base * 2.0 ** (failures - 1))
+    # one draw per attempt, independent of call history: attempt k of run
+    # `seed` always jitters identically
+    u = random.Random((seed << 20) ^ failures).random()
+    return wait * (1.0 + jitter * u)
+
+
 def run_with_restarts(make_state, train_step, ckpt_mgr, *, total_steps: int,
                       checkpoint_every: int = 10, max_failures: int = 5,
                       watchdog: Optional[StepWatchdog] = None,
-                      on_restart: Optional[Callable[[int, int], None]] = None):
+                      on_restart: Optional[Callable[..., None]] = None,
+                      backoff_base: float = 0.0, backoff_max: float = 30.0,
+                      backoff_jitter: float = 0.1, seed: int = 0,
+                      sleep: Callable[[float], None] = time.sleep):
     """Fault-tolerant train loop.
 
     make_state(restore_step | None) -> (state, start_step): builds fresh or
     restored state.  train_step(state, step) -> state.  Any exception rolls
     back to the latest checkpoint; the stateless data pipeline guarantees
     identical batches on replay.
+
+    Restarts back off exponentially when ``backoff_base > 0``: attempt k
+    waits ``min(backoff_max, backoff_base * 2^(k-1))`` scaled by a seeded
+    jitter in ``[1, 1 + backoff_jitter]`` (see :func:`restart_backoff`).
+    ``on_restart(step, failures, wait)`` receives the wait actually slept;
+    two-argument legacy callbacks keep working.  ``sleep`` is injectable
+    so tests assert the schedule without wall-clock cost.
     """
     failures = 0
     state, step = make_state(ckpt_mgr.latest_step())
@@ -77,8 +112,16 @@ def run_with_restarts(make_state, train_step, ckpt_mgr, *, total_steps: int,
                     f"failure budget exhausted ({max_failures})") from e
             ckpt_mgr.wait()
             restore_step = ckpt_mgr.latest_step()
+            wait = restart_backoff(failures, base=backoff_base,
+                                   cap=backoff_max, jitter=backoff_jitter,
+                                   seed=seed)
             if on_restart:
-                on_restart(step, failures)
+                try:
+                    on_restart(step, failures, wait)
+                except TypeError:
+                    on_restart(step, failures)  # pre-backoff signature
+            if wait > 0.0:
+                sleep(wait)
             state, step = make_state(restore_step)
     ckpt_mgr.wait()
     return state, step, failures

@@ -1,0 +1,398 @@
+"""Hazard taxonomy + deterministic fault injection (the chaos harness).
+
+The paper's FPGA pipeline earns its keep because binary128 results can be
+*trusted* on ill-conditioned workloads — so the software engine needs an
+explicit failure model, not silent NaN propagation.  This module owns both
+halves of that model (DESIGN.md §12):
+
+  * the **hazard taxonomy** — the typed errors every guarded layer raises.
+    :class:`NumericalHazardError` (NaN/Inf/overflow, naming the offending
+    operand), its subclass :class:`SliceOverflowError` (Ozaki
+    slice-extraction anchor overflow, which otherwise corrupts slices
+    silently), and :class:`BackendExecutionError` (a kernel backend failed
+    and so did every declared fallback).  ``repro.gemm.guard`` raises the
+    first two; the engine's failover loop raises the third.
+
+  * the **fault-injection harness** — :class:`FaultPlan`, a frozen record
+    of seeded :class:`Injection` specs, armed process-wide via the
+    :func:`inject` context manager.  Production code carries cheap hooks
+    (``poke``/``corrupt``/``zero_panel``) that are inert (one ``is None``
+    test) unless a plan is armed, so the hot path pays nothing.  Injection
+    classes cover the chaos suite's fault matrix: limb flips and NaN/Inf
+    tile poison (``corrupt``), synthetic backend failures (``poke`` on
+    ``backend.<name>`` sites), SUMMA panel loss (``zero_panel``, baked
+    into the traced K-loop at a chosen step), autotune-cache corruption
+    (``chaos_cache``), and mid-refinement kills (``poke`` on
+    ``refine.kill``).  Every firing is logged, so tests can assert a fault
+    actually happened before asserting it was detected or recovered.
+
+Injections are deterministic: entry selection derives from
+``FaultPlan.seed`` and the site name (via crc32, not Python's salted
+``hash``), and each injection disarms after ``times`` firings — the same
+plan replays the same faults, which is what lets ``run_with_restarts``
+recovery be asserted exactly.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "NumericalHazardError", "SliceOverflowError", "BackendExecutionError",
+    "InjectedFault", "BackendFailoverWarning",
+    "Injection", "FaultPlan", "inject", "active", "fired", "report",
+    "poke", "corrupt", "zero_panel", "chaos_cache",
+]
+
+
+# --------------------------------------------------------------------------
+# hazard taxonomy
+# --------------------------------------------------------------------------
+
+
+class NumericalHazardError(ArithmeticError):
+    """A guarded execution found NaN/Inf/overflow or a shadow mismatch.
+
+    Carries *where* the hazard sits so callers can act on it: ``operand``
+    ("A" | "B" | "C" | "output"), ``kind`` ("nan" | "inf" | "overflow" |
+    "mismatch"), the first offending ``index``, and the plan's
+    ``backend``/``precision``.  ``report`` is the JSON-able summary the
+    chaos artifact collects.
+    """
+
+    def __init__(self, message: str, *, kind: str = "nan",
+                 operand: str = "output", backend: str = "?",
+                 precision: str = "?", index: Optional[tuple] = None,
+                 nan_count: int = 0, inf_count: int = 0,
+                 detail: Optional[str] = None):
+        super().__init__(message)
+        self.kind = kind
+        self.operand = operand
+        self.backend = backend
+        self.precision = precision
+        self.index = index
+        self.nan_count = int(nan_count)
+        self.inf_count = int(inf_count)
+        self.detail = detail
+
+    @property
+    def report(self) -> Dict[str, Any]:
+        return {
+            "error": type(self).__name__, "kind": self.kind,
+            "operand": self.operand, "backend": self.backend,
+            "precision": self.precision, "index": self.index,
+            "nan_count": self.nan_count, "inf_count": self.inf_count,
+            "detail": self.detail,
+        }
+
+
+class SliceOverflowError(NumericalHazardError):
+    """Operand magnitude exceeds the Ozaki slice-extraction anchor range.
+
+    Rump's ExtractVector builds its fixed-point anchor as
+    ``sigma = 2^(e + p - beta)`` from the row/col magnitude ``2^e``; for
+    ``e`` within ``p - beta`` octaves of the limb dtype's max exponent the
+    anchor overflows to Inf and ``(x + sigma) - sigma`` turns every slice
+    into NaN — *after* extraction, so without this check the corruption
+    surfaces only as an unexplained NaN product (or, one octave lower, as
+    silently saturated slices).  Raised by ``check="finite"``/``"full"``
+    before the sliced backends run.
+    """
+
+
+class BackendExecutionError(RuntimeError):
+    """A kernel backend failed and every declared fallback failed too.
+
+    ``attempts`` is the ordered tuple of ``(backend, repr(error))`` pairs
+    actually tried — the receipt of the failover walk.
+    """
+
+    def __init__(self, message: str,
+                 attempts: Tuple[Tuple[str, str], ...] = ()):
+        super().__init__(message)
+        self.attempts = tuple(attempts)
+
+
+class InjectedFault(RuntimeError):
+    """The synthetic failure an armed ``Injection(kind="raise")`` raises.
+
+    A ``RuntimeError`` on purpose: the recovery machinery under test
+    (``run_with_restarts``, the engine failover loop) must catch it through
+    the same ``except`` clauses that catch the real fault it models.
+    """
+
+    def __init__(self, site: str, message: Optional[str] = None):
+        super().__init__(message or f"injected fault at {site!r}")
+        self.site = site
+
+
+class BackendFailoverWarning(RuntimeWarning):
+    """A backend failed (or is quarantined) and a fallback took over."""
+
+
+# --------------------------------------------------------------------------
+# fault plans
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Injection:
+    """One seeded fault.  ``site`` names the hook that fires it:
+
+    ==================  =========================  =======================
+    site                kinds                      meaning
+    ==================  =========================  =======================
+    ``gemm.a|b|c|out``  nan, inf, limb_flip, neg   poison/flip entries of
+                                                   an engine operand or of
+                                                   the computed product
+    ``backend.<name>``  raise                      that backend's kernel
+                                                   "fails to lower"
+    ``summa.panel.a|b`` zero                       the K-step ``step``'s
+                                                   broadcast panel is lost
+    ``refine.kill``     raise                      refinement iteration
+                                                   ``step`` dies mid-flight
+    ``cache.file``      truncate, garbage, delete  autotune-cache file
+                                                   corruption (via
+                                                   ``chaos_cache``)
+    ==================  =========================  =======================
+
+    ``times`` firings arm the injection (then it disarms); ``step``
+    selects a SUMMA K-step / refinement iteration where that applies;
+    ``frac`` is the poisoned-entry fraction for nan/inf kinds; ``limb``
+    picks the limb plane; ``scale`` is the limb_flip multiplier (2.0 = an
+    exponent-bit upset, the classic single-event model).
+    """
+
+    site: str
+    kind: str = "raise"
+    times: int = 1
+    step: Optional[int] = None
+    frac: float = 0.05
+    limb: int = 0
+    scale: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic chaos schedule: seed + injection specs."""
+
+    seed: int = 0
+    injections: Tuple[Injection, ...] = ()
+
+
+class _Armed:
+    """Mutable runtime state of one armed FaultPlan."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.remaining = [inj.times for inj in plan.injections]
+        self.log: List[Dict[str, Any]] = []
+
+
+_ACTIVE: Optional[_Armed] = None
+
+
+def active() -> bool:
+    """True iff a FaultPlan is armed (the hooks' one-branch fast path)."""
+    return _ACTIVE is not None
+
+
+def fired() -> List[Dict[str, Any]]:
+    """Log of injections that actually fired under the current plan."""
+    return list(_ACTIVE.log) if _ACTIVE is not None else []
+
+
+def report() -> Dict[str, Any]:
+    """JSON-able summary of the armed plan (the chaos-artifact payload)."""
+    if _ACTIVE is None:
+        return {"active": False, "fired": []}
+    return {
+        "active": True,
+        "seed": _ACTIVE.plan.seed,
+        "injections": [dataclasses.asdict(i) for i in _ACTIVE.plan.injections],
+        "fired": fired(),
+    }
+
+
+def _clear_trace_caches() -> None:
+    # injections that run at *trace* time (zero_panel inside the SUMMA
+    # fori_loop body) bake the fault into compiled graphs; dropping the
+    # engine's compile caches on arm AND disarm guarantees no faulty trace
+    # outlives its FaultPlan and no clean trace masks an armed one
+    try:
+        from repro.gemm import engine
+    except Exception:  # gemm not importable (partial install): nothing cached
+        return
+    for fn in (engine._execute_2d_jit, engine._execute_batched_jit,
+               engine._execute_fused_alpha_jit, engine._execute_fused_full_jit,
+               engine._apply_epilogue_jit):
+        fn.clear_cache()
+    engine._summa_runner_jit.cache_clear()
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan):
+    """Arm a FaultPlan for the dynamic extent of the ``with`` block.
+
+    Not reentrant (a chaos experiment is one schedule); yields the armed
+    state so tests can inspect ``fired()`` mid-flight.
+    """
+    global _ACTIVE
+    if _ACTIVE is not None:
+        raise RuntimeError("a FaultPlan is already armed (inject() does "
+                           "not nest — one chaos schedule at a time)")
+    _clear_trace_caches()
+    _ACTIVE = _Armed(plan)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = None
+        _clear_trace_caches()
+
+
+def _fire(site: str, **ctx) -> Optional[Injection]:
+    """Consume one firing of the first armed injection matching ``site``.
+
+    ``iteration=`` in ``ctx`` must equal the injection's ``step`` when one
+    is pinned (the refinement-kill selector); SUMMA ``step`` matching is
+    instead baked into the traced graph by ``zero_panel``.
+    """
+    if _ACTIVE is None:
+        return None
+    for i, inj in enumerate(_ACTIVE.plan.injections):
+        if inj.site != site or _ACTIVE.remaining[i] <= 0:
+            continue
+        if inj.step is not None and "iteration" in ctx \
+                and ctx["iteration"] != inj.step:
+            continue
+        _ACTIVE.remaining[i] -= 1
+        _ACTIVE.log.append({"site": site, "kind": inj.kind,
+                            "remaining": _ACTIVE.remaining[i], **ctx})
+        return inj
+    return None
+
+
+def _site_rng(site: str) -> np.random.Generator:
+    seed = _ACTIVE.plan.seed if _ACTIVE is not None else 0
+    return np.random.default_rng(
+        (seed << 32) ^ zlib.crc32(site.encode("utf-8")))
+
+
+# --------------------------------------------------------------------------
+# hooks (called by production code; inert without an armed plan)
+# --------------------------------------------------------------------------
+
+
+def poke(site: str, **ctx) -> None:
+    """Raise :class:`InjectedFault` if a ``raise``-kind injection is armed.
+
+    The hook for control-flow faults: a backend that "fails to lower"
+    (``backend.<name>`` sites, fired at trace time inside the engine
+    dispatch) or a refinement iteration killed mid-flight
+    (``refine.kill``, matched on ``iteration=``).
+    """
+    inj = _fire(site, **ctx)
+    if inj is not None and inj.kind == "raise":
+        raise InjectedFault(site)
+
+
+def corrupt(site: str, x):
+    """Return ``x`` with an armed data fault applied (else ``x`` itself).
+
+    ``x`` is a multi-limb value.  ``nan``/``inf`` poison ``frac`` of the
+    entries of limb ``limb``; ``limb_flip`` multiplies one seeded entry by
+    ``scale`` (default 2 — an exponent-bit upset: *finite but wrong*, the
+    case only the ``check="full"`` shadow product can see); ``neg`` flips
+    one entry's sign.  Selection is seeded and shape-static, so the same
+    mask applies whether ``x`` is concrete or traced.
+    """
+    inj = _fire(site)
+    if inj is None:
+        return x
+    import jax.numpy as jnp
+
+    from repro.core import mp
+
+    ls = list(mp.limbs(x))
+    li = min(inj.limb, len(ls) - 1)
+    l = ls[li]
+    size = int(np.prod(l.shape)) or 1
+    rng = _site_rng(site)
+    if inj.kind in ("nan", "inf"):
+        n_bad = max(1, int(inj.frac * size))
+        flat = rng.choice(size, size=n_bad, replace=False)
+        mask = np.zeros(l.shape, bool)
+        mask.reshape(-1)[flat] = True
+        payload = np.nan if inj.kind == "nan" else np.inf
+        ls[li] = jnp.where(jnp.asarray(mask), payload, l)
+    elif inj.kind in ("limb_flip", "neg"):
+        mask = np.zeros(l.shape, bool)
+        mask.reshape(-1)[int(rng.integers(size))] = True
+        factor = inj.scale if inj.kind == "limb_flip" else -1.0
+        ls[li] = jnp.where(jnp.asarray(mask), l * factor, l)
+    else:
+        raise ValueError(f"unknown corrupt kind {inj.kind!r} at {site!r}")
+    _ACTIVE.log[-1]["shape"] = tuple(l.shape)
+    return mp.from_limbs(ls)
+
+
+def zero_panel(site: str, panel, t):
+    """Zero a SUMMA broadcast panel at K-step ``step`` (traced selector).
+
+    Called inside the engine's ``fori_loop`` body at trace time; the
+    firing bakes a ``where(t == step, 0, panel)`` into the graph — the
+    deterministic model of "the owning shard's panel contribution was
+    lost at step ``step``".  ``inject`` clears the engine's compile caches
+    on arm/disarm so the faulty trace cannot leak out of the plan's scope.
+    """
+    inj = _fire(site)
+    if inj is None or inj.kind != "zero":
+        return panel
+    import jax.numpy as jnp
+
+    from repro.core import mp
+
+    step = inj.step or 0
+    _ACTIVE.log[-1]["step"] = step
+    return mp.map_limbs(
+        lambda l: jnp.where(jnp.asarray(t) == step, jnp.zeros_like(l), l),
+        panel)
+
+
+def chaos_cache(path: str) -> List[str]:
+    """Apply armed ``cache.file`` injections to an autotune-cache file.
+
+    ``truncate`` cuts the file mid-JSON (the killed-writer artifact the
+    atomic write protocol is meant to make impossible — injecting it
+    proves the *reader* still degrades to heuristics); ``garbage``
+    replaces the content with non-JSON; ``delete`` unlinks it.  Returns
+    the kinds applied.
+    """
+    applied = []
+    while True:
+        inj = _fire("cache.file")
+        if inj is None:
+            break
+        if inj.kind == "truncate":
+            with open(path, "rb") as f:
+                raw = f.read()
+            with open(path, "wb") as f:
+                f.write(raw[: max(1, len(raw) // 2)])
+        elif inj.kind == "garbage":
+            with open(path, "w") as f:
+                f.write('{"v?/corrupted": [not json')
+        elif inj.kind == "delete":
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+        else:
+            raise ValueError(f"unknown cache.file kind {inj.kind!r}")
+        applied.append(inj.kind)
+    return applied

@@ -49,6 +49,7 @@ from repro.core.linalg import (
     rpotrf,
 )
 from repro.gemm import execute, make_plan, replan_precision
+from repro.runtime import faults as _faults
 
 __all__ = ["TIERS", "LADDER_CELLS", "RefinementInfo", "rgesv", "rposv",
            "lu_solve_refined", "cholesky_solve_refined", "tier_eps"]
@@ -233,10 +234,22 @@ class RefinementInfo:
     # best measured iterate, this is that iterate's berr — the history
     # stays an honest per-iteration log of what was measured
     final_backward_error: float = float("inf")
+    # why a non-converged solve stopped refining: dicts with a "kind" of
+    # "escalation-capped" (max_escalations= hit with rungs left unclimbed),
+    # "ladder-exhausted" (stagnated at the top rung for this target), or
+    # "iteration-budget" (max_iters ran out), plus the iteration/rung/
+    # backward-error context.  Empty on a converged solve — so
+    # ``converged or info.hazards`` always explains the outcome, and the
+    # caller of a capped best-effort solve gets a report, not a bare throw
+    hazards: List[dict] = dataclasses.field(default_factory=list)
 
 
 def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
-            max_iters, tol, stagnation_ratio, block, plan, plan_overrides):
+            max_iters, tol, stagnation_ratio, block, plan, plan_overrides,
+            max_escalations=None):
+    if max_escalations is not None and max_escalations < 0:
+        raise ValueError(f"max_escalations must be >= 0 or None, "
+                         f"got {max_escalations}")
     factor_tier = _tier(factor_tier)
     if target_tier is None:
         target_tier = mp.precision_of(a) if _is_ml(a) else "dd"
@@ -311,8 +324,21 @@ def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
                              np.where(rmax == 0, 0.0, np.inf))
         return r, float(np.max(cells))
 
+    hazards: List[dict] = []
+
+    def hazard(kind, berr):
+        hazards.append({
+            "kind": kind, "iteration": it, "rung": factor_tier,
+            "target": target_tier, "backward_error": berr,
+            "finite": math.isfinite(berr),
+        })
+
     while it < max_iters:
         it += 1
+        # chaos hook: an armed "refine.kill" injection (step=iteration)
+        # raises here, modelling a preempted/died refinement iteration —
+        # the runtime.failover restart harness is what must absorb it
+        _faults.poke("refine.kill", iteration=it)
         r, berr = measure(x)
         x_measured = True
         history.append(berr)
@@ -333,10 +359,17 @@ def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
             # rounding and NaNs).
             stagnations += 1
             nxt = TIERS.index(factor_tier) + 1
+            # bounded escalation: a cap turns "climb until the ladder ends"
+            # into "climb at most N rungs, then return best-effort with a
+            # hazard report" — the serving posture, where a runaway qd
+            # refactorization is worse than a documented dd-grade answer
+            capped = (max_escalations is not None
+                      and len(escalations) >= max_escalations)
             # escalate only while an iteration remains to act on it — an
             # escalation recorded with no capacity to correct would
             # overcount the telemetry vs factorizations actually done
-            if nxt <= TIERS.index(target_tier) and it < max_iters:
+            if nxt <= TIERS.index(target_tier) and it < max_iters \
+                    and not capped:
                 escalations.append({
                     "iteration": it, "from": factor_tier,
                     "to": TIERS[nxt],
@@ -355,7 +388,18 @@ def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
                 # finite stagnation: r is still valid — reuse it with the
                 # new rung's correction
             else:
-                break  # at the ladder top for this target: genuine floor
+                # best-effort stop: name WHY refinement gave up, in
+                # precedence order — a cap with rungs left is the caller's
+                # decision ("escalation-capped"); the ladder top is the
+                # arithmetic's floor ("ladder-exhausted"); otherwise only
+                # the iteration budget ran out
+                if capped and nxt <= TIERS.index(target_tier):
+                    hazard("escalation-capped", berr)
+                elif nxt > TIERS.index(target_tier):
+                    hazard("ladder-exhausted", berr)
+                else:
+                    hazard("iteration-budget", berr)
+                break
         x = _correct_step(get_fac(factor_tier), r, x,
                           factor_tier=factor_tier, target_tier=target_tier,
                           assume=assume)
@@ -372,6 +416,10 @@ def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
     if best is not None and not (final_berr <= best[0]):
         x = best[1]  # a diverged last step never worsens the returned x
         final_berr = best[0]
+    if not converged and not hazards:
+        # the while condition (not a break) ended the loop: the budget ran
+        # out mid-ladder — every non-converged solve reports a hazard
+        hazard("iteration-budget", final_berr)
     if vector_rhs:
         x = mp.map_limbs(lambda l: l[..., 0], x)
     info = RefinementInfo(
@@ -380,6 +428,7 @@ def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
         escalations=escalations,
         factorizations={t: c for t, c in fac_counts.items() if c},
         stagnations=stagnations, final_backward_error=final_berr,
+        hazards=hazards,
     )
     return x, info
 
@@ -388,6 +437,7 @@ def rgesv(a, b, *, factor_tier: str = "f64",
           target_tier: Optional[str] = None, assume: str = "gen",
           max_iters: int = 40, tol: Optional[float] = None,
           stagnation_ratio: float = 0.25, block: int = 32,
+          max_escalations: Optional[int] = None,
           plan=None, **plan_overrides):
     """Solve A x = b by factor-cheap / refine-at-target iteration.
 
@@ -406,15 +456,20 @@ def rgesv(a, b, *, factor_tier: str = "f64",
     the tier's genuine floor.
 
     ``assume="pos"`` factors via Cholesky (the SDP Schur solve's path).
-    Returns ``(x, info)`` with ``x`` at the target tier and ``info`` a
-    :class:`RefinementInfo` (per-iteration backward errors, rungs,
-    escalations, factorization counts).
+    ``max_escalations`` bounds the ladder climb: after that many
+    escalations a stagnating solve stops with a best-effort x and a
+    ``{"kind": "escalation-capped", ...}`` entry in ``info.hazards``
+    instead of refactoring at the next rung (``max_escalations=0`` pins
+    the starting rung).  Returns ``(x, info)`` with ``x`` at the target
+    tier and ``info`` a :class:`RefinementInfo` (per-iteration backward
+    errors, rungs, escalations, factorization counts, hazards).
     """
     if assume not in ("gen", "pos"):
         raise ValueError(f"assume must be 'gen' or 'pos', got {assume!r}")
     return _refine(a, b, factor_tier=factor_tier, target_tier=target_tier,
                    assume=assume, factorization=None, max_iters=max_iters,
                    tol=tol, stagnation_ratio=stagnation_ratio, block=block,
+                   max_escalations=max_escalations,
                    plan=plan, plan_overrides=plan_overrides)
 
 
@@ -427,27 +482,32 @@ def rposv(a, b, **kwargs):
 def lu_solve_refined(a, lu, piv, b, *, target_tier: Optional[str] = None,
                      max_iters: int = 40, tol: Optional[float] = None,
                      stagnation_ratio: float = 0.25, block: int = 32,
+                     max_escalations: Optional[int] = None,
                      plan=None, **plan_overrides):
     """Refinement-backed ``lu_solve``: reuse an existing ``rgetrf`` output.
 
     The factorization's own tier (inferred from ``lu``) is the starting
-    rung; escalation past it re-factors ``a`` as usual.  ``a`` must be the
-    matrix that was factored.
+    rung; escalation past it re-factors ``a`` as usual (bounded by
+    ``max_escalations``, see :func:`rgesv`).  ``a`` must be the matrix
+    that was factored.
     """
     return _refine(a, b, factor_tier=mp.precision_of(lu),
                    target_tier=target_tier, assume="gen",
                    factorization=(lu, piv), max_iters=max_iters, tol=tol,
                    stagnation_ratio=stagnation_ratio, block=block,
+                   max_escalations=max_escalations,
                    plan=plan, plan_overrides=plan_overrides)
 
 
 def cholesky_solve_refined(a, l, b, *, target_tier: Optional[str] = None,
                            max_iters: int = 40, tol: Optional[float] = None,
                            stagnation_ratio: float = 0.25, block: int = 32,
+                           max_escalations: Optional[int] = None,
                            plan=None, **plan_overrides):
     """Refinement-backed ``cholesky_solve``: reuse an ``rpotrf`` factor."""
     return _refine(a, b, factor_tier=mp.precision_of(l),
                    target_tier=target_tier, assume="pos",
                    factorization=l, max_iters=max_iters, tol=tol,
                    stagnation_ratio=stagnation_ratio, block=block,
+                   max_escalations=max_escalations,
                    plan=plan, plan_overrides=plan_overrides)

@@ -1,0 +1,340 @@
+"""Chaos suite: every FaultPlan injection class ends in a typed hazard or
+an oracle-conformant recovery — never a silent wrong answer.
+
+Each test exercises one injection class end to end through the production
+stack (engine dispatch, failover loop, plan cache, SUMMA K-loop,
+refinement driver) and records a per-class verdict; the module teardown
+writes them to ``CHAOS_REPORT.json`` — the hazard-report artifact CI's
+``chaos`` job uploads.  Run via ``make chaos-tests`` (forces 4 host
+devices so the SUMMA panel-loss cell gets a real 2x2 mesh).
+"""
+
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import gemm
+from repro.core import mp
+from repro.kernels.ref import ddgemm_ref
+from repro.runtime import faults
+from repro.runtime.faults import (BackendExecutionError,
+                                  BackendFailoverWarning, FaultPlan,
+                                  InjectedFault, Injection,
+                                  NumericalHazardError)
+
+pytestmark = pytest.mark.chaos
+
+N = 12
+DD_TOL = 2.0 ** -96
+
+VERDICTS = {}
+
+
+def verdict(cls: str, outcome: str, **detail):
+    assert outcome in ("detected", "recovered")
+    VERDICTS[cls] = {"outcome": outcome, **detail}
+
+
+@pytest.fixture(scope="module", autouse=True)
+def chaos_report():
+    yield
+    with open("CHAOS_REPORT.json", "w") as f:
+        json.dump({"schema": "repro-chaos/v1", "classes": VERDICTS}, f,
+                  indent=1, default=str)
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path):
+    cache = gemm.PlanCache(str(tmp_path / "plans.json"))
+    gemm.set_default_cache(cache)
+    yield cache
+    gemm.set_default_cache(None)
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return mp.from_float(jnp.asarray(rng.standard_normal(shape)), "dd")
+
+
+def _max_dev(got, want) -> float:
+    return float(np.abs(np.asarray(mp.to_float(got))
+                        - np.asarray(mp.to_float(want))).max())
+
+
+# --------------------------------------------------------------------------
+# class: limb flip (finite-but-wrong -> only the full shadow check sees it)
+# --------------------------------------------------------------------------
+
+
+def test_limb_flip_detected_by_full_check(tmp_cache):
+    a, b = _rand((N, N), 1), _rand((N, N), 2)
+    plan = gemm.make_plan(N, N, N, backend="xla", use_cache=False)
+    flip = Injection("gemm.out", kind="limb_flip", limb=0, scale=2.0)
+    # first, the threat model: under check="none" the flipped limb is
+    # FINITE and WRONG — the silent corruption the shadow product exists
+    # to catch
+    with faults.inject(FaultPlan(seed=3, injections=(flip,))):
+        out = gemm.execute(plan, a, b, check="none")
+        assert faults.fired()
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in mp.limbs(out))
+    assert _max_dev(out, ddgemm_ref(a, b)) > 1e-3
+    # the same fault under check="full" raises the typed mismatch hazard
+    with faults.inject(FaultPlan(seed=3, injections=(flip,))):
+        with pytest.raises(NumericalHazardError) as ei:
+            gemm.execute(plan, a, b, check="full")
+        assert [f["site"] for f in faults.fired()] == ["gemm.out"]
+    assert ei.value.kind == "mismatch"
+    assert ei.value.operand == "output"
+    verdict("limb-flip", "detected", error=ei.value.report)
+
+
+# --------------------------------------------------------------------------
+# class: NaN / Inf tile poison
+# --------------------------------------------------------------------------
+
+
+def test_nan_poison_detected_or_propagates(tmp_cache):
+    a, b = _rand((N, N), 4), _rand((N, N), 5)
+    plan = gemm.make_plan(N, N, N, backend="xla", use_cache=False)
+    poison = Injection("gemm.a", kind="nan", frac=0.1)
+    with faults.inject(FaultPlan(seed=1, injections=(poison,))):
+        with pytest.raises(NumericalHazardError) as ei:
+            gemm.execute(plan, a, b, check="finite")
+    assert ei.value.operand == "A" and ei.value.kind == "nan"
+    assert ei.value.nan_count == max(1, int(0.1 * N * N))
+    # the same poison under check="none" propagates IEEE-style
+    with faults.inject(FaultPlan(seed=1, injections=(poison,))):
+        out = gemm.execute(plan, a, b, check="none")
+    assert bool(jnp.any(jnp.isnan(mp.limbs(out)[0])))
+    verdict("nan-poison", "detected", error=ei.value.report)
+
+
+def test_inf_poison_of_output_detected(tmp_cache):
+    a, b = _rand((N, N), 6), _rand((N, N), 7)
+    plan = gemm.make_plan(N, N, N, backend="ozaki", use_cache=False)
+    with faults.inject(FaultPlan(seed=2, injections=(
+            Injection("gemm.out", kind="inf", frac=0.05),))):
+        with pytest.raises(NumericalHazardError) as ei:
+            gemm.execute(plan, a, b, check="finite")
+    assert ei.value.operand == "output" and ei.value.kind == "inf"
+    verdict("inf-poison", "detected", error=ei.value.report)
+
+
+# --------------------------------------------------------------------------
+# class: autotune-cache corruption
+# --------------------------------------------------------------------------
+
+
+def test_cache_corruption_recovered(tmp_cache):
+    tmp_cache.put("some/tuned/key", {"bm": 16, "bn": 16, "bk": 8})
+    with faults.inject(FaultPlan(injections=(
+            Injection("cache.file", kind="truncate"),))):
+        assert faults.chaos_cache(tmp_cache.path) == ["truncate"]
+    # a fresh reader warns once, degrades to heuristics, and the GEMM
+    # still answers correctly
+    fresh = gemm.PlanCache(tmp_cache.path)
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        assert fresh.get("some/tuned/key") is None
+    gemm.set_default_cache(fresh)
+    a, b = _rand((N, N), 8), _rand((N, N), 9)
+    out = gemm.matmul(a, b, backend="ozaki")
+    assert _max_dev(out, ddgemm_ref(a, b)) < N * DD_TOL
+    # garbage and delete corruption degrade the same way (no warning on
+    # delete: a missing file is the normal cold start)
+    for kind in ("garbage", "delete"):
+        tmp_cache.put("some/tuned/key", {"bm": 16})
+        with faults.inject(FaultPlan(injections=(
+                Injection("cache.file", kind=kind),))):
+            assert faults.chaos_cache(tmp_cache.path) == [kind]
+        reader = gemm.PlanCache(tmp_cache.path)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            assert reader.get("some/tuned/key") is None
+    verdict("cache-corruption", "recovered",
+            kinds=["truncate", "garbage", "delete"])
+
+
+def test_killed_cache_writer_leaves_old_file_intact(tmp_cache, tmp_path,
+                                                    monkeypatch):
+    import repro.gemm.cache as cache_mod
+
+    tmp_cache.put("k1", {"bm": 16})
+
+    def dying_dump(obj, f, **kw):
+        f.write('{"k2": {"bm":')  # half an entry, then the "kill"
+        raise InjectedFault("cache.write")
+
+    monkeypatch.setattr(cache_mod.json, "dump", dying_dump)
+    with pytest.raises(InjectedFault):
+        tmp_cache.put("k2", {"bm": 32})
+    monkeypatch.undo()
+    # atomic write protocol: the visible file is the OLD complete one —
+    # never the torn write — and the temp file was cleaned up
+    assert [p.name for p in tmp_path.glob("*.tmp")] == []
+    fresh = gemm.PlanCache(tmp_cache.path)
+    assert fresh.get("k1") == {"bm": 16}
+    assert fresh.get("k2") is None
+    verdict("cache-writer-kill", "recovered")
+
+
+# --------------------------------------------------------------------------
+# class: backend execution failure -> failover + quarantine
+# --------------------------------------------------------------------------
+
+
+def test_backend_failure_fails_over_and_quarantines(tmp_cache):
+    a, b = _rand((N, N), 10), _rand((N, N), 11)
+    want = ddgemm_ref(a, b)
+    platform = jax.default_backend()
+    with faults.inject(FaultPlan(injections=(
+            Injection("backend.ozaki-pallas", kind="raise", times=5),))):
+        with pytest.warns(BackendFailoverWarning, match="ozaki"):
+            out = gemm.matmul(a, b, backend="ozaki-pallas")
+        assert _max_dev(out, want) < N * DD_TOL
+        assert len(faults.fired()) == 1
+        # the failure was recorded: repeat calls reroute at PLAN time, so
+        # the doomed backend is not re-attempted (the injection, still
+        # armed 4 more times, does not fire again)
+        assert gemm.quarantined(platform, "ozaki-pallas") is not None
+        with pytest.warns(BackendFailoverWarning, match="quarantined"):
+            plan2 = gemm.make_plan(N, N, N, backend="ozaki-pallas")
+        assert plan2.backend != "ozaki-pallas"
+        out2 = gemm.execute(plan2, a, b)
+        assert _max_dev(out2, want) < N * DD_TOL
+        assert len(faults.fired()) == 1
+    # the documented remedy lifts the bench
+    assert gemm.clear_quarantine() >= 1
+    assert gemm.quarantined(platform, "ozaki-pallas") is None
+    verdict("backend-failure", "recovered",
+            fallback=plan2.backend, quarantined="ozaki-pallas")
+
+
+def test_whole_chain_failure_raises_typed_receipt(tmp_cache):
+    a, b = _rand((N, N), 12), _rand((N, N), 13)
+    with faults.inject(FaultPlan(injections=tuple(
+            Injection(f"backend.{be}", kind="raise", times=5)
+            for be in ("ozaki-pallas", "ozaki", "xla")))):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", BackendFailoverWarning)
+            with pytest.raises(BackendExecutionError) as ei:
+                gemm.matmul(a, b, backend="ozaki-pallas")
+    # the receipt names every rung actually tried, in order
+    assert [at[0] for at in ei.value.attempts] == \
+        ["ozaki-pallas", "ozaki", "xla"]
+    assert all("InjectedFault" in at[1] for at in ei.value.attempts)
+
+
+# --------------------------------------------------------------------------
+# class: SUMMA panel loss (finite-but-wrong on a real 2x2 mesh)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.sharding
+@pytest.mark.skipif(jax.device_count() < 4,
+                    reason="needs 4 devices (run under make chaos-tests)")
+def test_summa_panel_loss_detected_by_full_check(tmp_cache):
+    from jax.sharding import Mesh
+
+    n = 32
+    a, b = _rand((n, n), 14), _rand((n, n), 15)
+    want = ddgemm_ref(a, b)
+    mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                ("rows", "cols"))
+    kw = dict(backend="xla", mesh=mesh, k_panel=8, use_cache=False)
+    with faults.inject(FaultPlan(injections=(
+            Injection("summa.panel.a", kind="zero", step=1),))):
+        with pytest.raises(NumericalHazardError) as ei:
+            gemm.matmul(a, b, check="full", **kw)
+        assert [f["site"] for f in faults.fired()] == ["summa.panel.a"]
+    # a zeroed K-panel is finite but wrong: only the shadow check sees it
+    assert ei.value.kind == "mismatch"
+    # leaving the plan's scope drops the faulty trace: the same sharded
+    # call retraces cleanly and conforms
+    got = gemm.matmul(a, b, check="full", **kw)
+    assert _max_dev(got, want) < n * DD_TOL
+    verdict("summa-panel-loss", "detected", error=ei.value.report)
+
+
+# --------------------------------------------------------------------------
+# class: mid-refinement kill -> run_with_restarts recovery with backoff
+# --------------------------------------------------------------------------
+
+
+def test_mid_refinement_kill_recovered_with_backoff(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    from repro.runtime.failover import restart_backoff, run_with_restarts
+    from repro.solve.refine import rgesv
+
+    n = 8
+    rng = np.random.default_rng(16)
+    a_np = rng.standard_normal((n, n)) + n * np.eye(n)
+    b_np = rng.standard_normal((n, 1))
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    restarts, waits = [], []
+
+    def make_state(restore_step):
+        if restore_step is None:
+            return {"solves": jnp.zeros(())}, 0
+        state, meta = mgr.restore({"solves": jnp.zeros(())})
+        return state, meta["step"]
+
+    def step_fn(state, step):
+        x, info = rgesv(a_np, b_np, factor_tier="f64", target_tier="dd",
+                        backend="xla")
+        assert info.converged
+        # measured in f64, so floored at f64 roundoff; the dd-grade
+        # backward error is already gated by info.converged
+        resid = np.abs(a_np @ np.asarray(mp.to_float(x)) - b_np).max()
+        assert resid < 1e-12
+        return {"solves": state["solves"] + 1}
+
+    with faults.inject(FaultPlan(seed=9, injections=(
+            Injection("refine.kill", kind="raise", step=1, times=1),))):
+        state, step, failures = run_with_restarts(
+            make_state, step_fn, mgr, total_steps=3, checkpoint_every=1,
+            max_failures=3, backoff_base=0.001, backoff_jitter=0.5, seed=9,
+            on_restart=lambda s, f, w: restarts.append((s, f, w)),
+            sleep=waits.append)
+        log = faults.fired()
+    # the kill fired exactly once, inside refinement iteration 1 ...
+    assert [(f["site"], f["iteration"]) for f in log] == [("refine.kill", 1)]
+    # ... run_with_restarts absorbed it, backed off the seeded wait, and
+    # the replayed step solved to convergence
+    assert failures == 1 and step == 3
+    assert float(state["solves"]) == 3
+    assert waits == [restart_backoff(1, base=0.001, jitter=0.5, seed=9)]
+    assert restarts == [(0, 1, waits[0])] and waits[0] > 0.0
+    verdict("refine-kill", "recovered", waited=waits[0])
+
+
+def test_escalation_cap_yields_best_effort_plus_hazard_report():
+    from repro.core.accuracy import hilbert_f64
+    from repro.solve.refine import rgesv
+
+    # Hilbert n=14 stagnates on the f64 rung and needs one escalation to
+    # converge (see test_solve.py); capping escalations at 0 must yield a
+    # best-effort result WITH a hazard report, not an exception and not a
+    # silent non-converged success
+    n = 14
+    h = hilbert_f64(n)
+    b = h @ np.ones((n, 1))
+    x, info = rgesv(h, b, factor_tier="f64", target_tier="dd",
+                    backend="xla", max_iters=25, max_escalations=0)
+    assert not info.converged
+    assert not info.escalations
+    assert [hz["kind"] for hz in info.hazards] == ["escalation-capped"]
+    hz = info.hazards[0]
+    assert hz["rung"] == "f64" and hz["target"] == "dd"
+    assert hz["finite"] and np.isfinite(info.final_backward_error)
+    assert np.isfinite(np.asarray(mp.to_float(x))).all()
+    # the uncapped run converges on the same data — the cap is the only
+    # difference between recovery and the hazard report
+    x2, info2 = rgesv(h, b, factor_tier="f64", target_tier="dd",
+                      backend="xla", max_iters=25)
+    assert info2.converged and not info2.hazards
+    verdict("escalation-cap", "recovered",
+            hazard=info.hazards[0], capped_berr=info.final_backward_error)

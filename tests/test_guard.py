@@ -1,0 +1,199 @@
+"""Guarded execution: the ``check=`` ladder's hazard-propagation contract.
+
+The documented policy, asserted cell by cell: ``check="none"`` propagates
+non-finite values IEEE-style (the kernel contract), ``check="finite"``
+raises a typed :class:`NumericalHazardError` naming the offending operand
+and first bad index, and — for the sliced backends — flags
+slice-extraction anchor overflow (:class:`SliceOverflowError`) that would
+otherwise corrupt slices silently.  The matrix runs NaN and Inf through
+each of A, B, and C across every backend x {dd, qd} cell.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import gemm
+from repro.core import mp
+from repro.kernels.ref import ddgemm_ref
+from repro.runtime.faults import NumericalHazardError, SliceOverflowError
+
+# qd has no whole-K 'ozaki' tier (slice count explodes past the 212-bit
+# target); pallas cells are covered by the dd column — interpret-mode qd
+# compiles add minutes without adding policy coverage
+BACKENDS = {
+    "dd": ("xla", "ref", "ozaki", "ozaki-pallas"),
+    "qd": ("xla", "ref"),
+}
+CELLS = [(p, be) for p, bes in BACKENDS.items() for be in bes]
+
+N = 8
+BAD_IDX = (2, 3)
+
+# backends whose Ozaki slice extraction SWALLOWS a NaN operand entry into
+# finite-but-wrong output (the anchor sum (NaN + sigma) - sigma is masked
+# by the extraction's zero-handling): the silent-corruption case
+# check="finite" exists to catch.  Inf still propagates there.
+SLICED = ("ozaki", "ozaki-pallas")
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path):
+    cache = gemm.PlanCache(str(tmp_path / "plans.json"))
+    gemm.set_default_cache(cache)
+    yield cache
+    gemm.set_default_cache(None)
+
+
+def _rand(precision, shape, seed):
+    rng = np.random.default_rng(seed)
+    return mp.from_float(jnp.asarray(rng.standard_normal(shape)), precision)
+
+
+def _poison(x, index, value):
+    """Set limb 0 of one entry to ``value`` (NaN/Inf)."""
+    ls = list(mp.limbs(x))
+    l0 = np.asarray(ls[0]).copy()
+    l0[index] = value
+    ls[0] = jnp.asarray(l0)
+    return mp.from_limbs(ls)
+
+
+def _any_nonfinite(x) -> bool:
+    return any(bool(jnp.any(~jnp.isfinite(l))) for l in mp.limbs(x))
+
+
+def _hazard_args(precision, operand, hazard):
+    """(a, b, epilogue-kwargs) with ``hazard`` poisoned into ``operand``."""
+    a = _rand(precision, (N, N), 0)
+    b = _rand(precision, (N, N), 1)
+    c = _rand(precision, (N, N), 2)
+    val = np.nan if hazard == "nan" else np.inf
+    if operand == "A":
+        a = _poison(a, BAD_IDX, val)
+    elif operand == "B":
+        b = _poison(b, BAD_IDX, val)
+    else:
+        c = _poison(c, BAD_IDX, val)
+    kw = {"alpha": 1.0, "beta": 1.0, "c": c} if operand == "C" else {}
+    return a, b, kw
+
+
+@pytest.mark.parametrize("hazard", ["nan", "inf"])
+@pytest.mark.parametrize("operand", ["A", "B", "C"])
+@pytest.mark.parametrize("precision,backend", CELLS)
+class TestHazardMatrix:
+    def test_check_none_propagates(self, tmp_cache, precision, backend,
+                                   operand, hazard):
+        a, b, kw = _hazard_args(precision, operand, hazard)
+        out = gemm.matmul(a, b, backend=backend, check="none", **kw)
+        if backend in SLICED and operand in ("A", "B") and hazard == "nan":
+            # slice extraction swallows the NaN: the result is FINITE and
+            # WRONG — undetectable without check="finite".  Assert both
+            # halves so a future extraction change that restores honest
+            # propagation shows up here.
+            assert not _any_nonfinite(out)
+            clean = ddgemm_ref(_rand("dd", (N, N), 0), _rand("dd", (N, N), 1))
+            dev = np.abs(np.asarray(mp.to_float(out))
+                         - np.asarray(mp.to_float(clean))).max()
+            assert dev > 0.1, "NaN poison left no trace at all"
+        else:
+            assert _any_nonfinite(out), \
+                f"{hazard} in {operand} vanished on {backend}/{precision}"
+
+    def test_check_finite_raises_naming_operand(self, tmp_cache, precision,
+                                                backend, operand, hazard):
+        a, b, kw = _hazard_args(precision, operand, hazard)
+        with pytest.raises(NumericalHazardError) as ei:
+            gemm.matmul(a, b, backend=backend, check="finite", **kw)
+        err = ei.value
+        assert err.operand == operand
+        assert err.kind == hazard
+        assert err.backend == backend
+        assert err.precision == precision
+        assert err.index == BAD_IDX
+        assert (err.nan_count, err.inf_count) == \
+            ((1, 0) if hazard == "nan" else (0, 1))
+        # the JSON-able report the chaos artifact collects
+        assert err.report["operand"] == operand
+        assert err.report["error"] == "NumericalHazardError"
+
+
+class TestSliceOverflow:
+    def test_sliced_backend_raises_nonsliced_accepts(self, tmp_cache):
+        # |A| ~ 2^1005 overflows the 2^(e+p-beta) extraction anchor on the
+        # sliced backends (which would NaN every slice *after* extraction);
+        # the same operands are representable, finite work for xla
+        rng = np.random.default_rng(7)
+        a = mp.from_float(
+            jnp.asarray((rng.random((N, N)) + 0.5) * 2.0 ** 1005), "dd")
+        b = mp.from_float(
+            jnp.asarray((rng.random((N, N)) + 0.5) * 2.0 ** -1005), "dd")
+        plan = gemm.make_plan(N, N, N, backend="ozaki", use_cache=False)
+        limit = gemm.guard.slice_overflow_limit(plan)
+        assert limit is not None and 2.0 ** 1005 > limit
+        with pytest.raises(SliceOverflowError) as ei:
+            gemm.execute(plan, a, b, check="finite")
+        assert ei.value.operand == "A"
+        assert ei.value.kind == "overflow"
+        assert ei.value.backend == "ozaki"
+        # the documented remedy: a non-sliced backend takes the same data
+        p_xla = gemm.make_plan(N, N, N, backend="xla", use_cache=False)
+        out = gemm.execute(p_xla, a, b, check="finite")
+        assert not _any_nonfinite(out)
+
+    def test_nonsliced_plans_have_no_limit(self, tmp_cache):
+        for be in ("xla", "ref", "pallas"):
+            plan = gemm.make_plan(N, N, N, backend=be, use_cache=False)
+            assert gemm.guard.slice_overflow_limit(plan) is None
+
+
+class TestFullCheck:
+    def test_clean_pass_with_epilogue(self, tmp_cache):
+        a, b = _rand("dd", (N, N), 3), _rand("dd", (N, N), 4)
+        c = _rand("dd", (N, N), 5)
+        for backend in ("xla", "ozaki", "ozaki-pallas"):
+            out = gemm.matmul(a, b, backend=backend, check="full",
+                              alpha=0.5, beta=2.0, c=c)
+            want = np.asarray(mp.to_float(ddgemm_ref(a, b))) * 0.5 \
+                + 2.0 * np.asarray(mp.to_float(c))
+            assert np.abs(np.asarray(mp.to_float(out)) - want).max() < 1e-10
+
+    def test_batched_full_check_clean(self, tmp_cache):
+        a = _rand("dd", (3, N, N), 6)
+        b = _rand("dd", (3, N, N), 7)
+        out = gemm.matmul(a, b, backend="xla", check="full")
+        assert out.limbs()[0].shape == (3, N, N)
+
+
+class TestCheckResolution:
+    def test_unknown_level_rejected(self, tmp_cache):
+        a, b = _rand("dd", (N, N), 8), _rand("dd", (N, N), 9)
+        plan = gemm.make_plan(N, N, N, backend="xla", use_cache=False)
+        with pytest.raises(ValueError, match="check level"):
+            gemm.execute(plan, a, b, check="paranoid")
+        with pytest.raises(ValueError, match="check level"):
+            gemm.make_plan(N, N, N, check="paranoid")
+
+    def test_plan_field_sets_default_argument_overrides(self, tmp_cache):
+        a, b, _ = _hazard_args("dd", "A", "nan")
+        plan = gemm.make_plan(N, N, N, backend="xla", check="finite",
+                              use_cache=False)
+        # plan field alone arms the check...
+        with pytest.raises(NumericalHazardError):
+            gemm.execute(plan, a, b)
+        # ...and the explicit argument wins over the plan field
+        out = gemm.execute(plan, a, b, check="none")
+        assert _any_nonfinite(out)
+
+    def test_under_outer_jit_degrades_to_propagation(self, tmp_cache):
+        # flags are tracers inside a surrounding jit: raising there would
+        # poison the shared compiled graph, so the documented behavior is
+        # propagation (callers needing hard guarantees run eagerly)
+        a, b, _ = _hazard_args("dd", "A", "nan")
+        plan = gemm.make_plan(N, N, N, backend="xla", check="finite",
+                              use_cache=False)
+        f = jax.jit(lambda x, y: gemm.execute(plan, x, y))
+        out = f(a, b)
+        assert _any_nonfinite(out)

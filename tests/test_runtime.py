@@ -216,6 +216,76 @@ class TestFailover:
             run_with_restarts(make_state, always_fail, mgr, total_steps=5,
                               max_failures=2)
 
+    def test_restart_backoff_schedule(self):
+        from repro.runtime.failover import restart_backoff
+
+        # base=0 (the default) keeps the historical restart-immediately
+        # behavior; so does attempt 0
+        assert restart_backoff(3) == 0.0
+        assert restart_backoff(0, base=0.5) == 0.0
+        # exponential under the cap, capped beyond it (jitter disabled)
+        waits = [restart_backoff(k, base=0.5, cap=2.0, jitter=0.0)
+                 for k in (1, 2, 3, 4)]
+        assert waits == [0.5, 1.0, 2.0, 2.0]
+        # seeded jitter: deterministic per (seed, attempt), inside
+        # [1, 1 + jitter], and distinct across attempts (de-synchronizes a
+        # fleet that died at once)
+        w1 = restart_backoff(1, base=1.0, jitter=0.25, seed=7)
+        assert w1 == restart_backoff(1, base=1.0, jitter=0.25, seed=7)
+        assert 1.0 <= w1 <= 1.25
+        assert w1 != restart_backoff(2, base=1.0, cap=1.0, jitter=0.25,
+                                     seed=7)
+
+    def test_restart_waits_surface_in_on_restart(self, tmp_path):
+        from repro.checkpoint import CheckpointManager
+        from repro.runtime.failover import (SimulatedFailure,
+                                            restart_backoff,
+                                            run_with_restarts)
+
+        mgr = CheckpointManager(str(tmp_path / "a"), async_save=False)
+        fail_at = {2, 5}
+        restarts, legacy, slept = [], [], []
+
+        def make_state_for(mgr):
+            def make_state(restore_step):
+                if restore_step is None:
+                    return {"acc": jnp.zeros(())}, 0
+                state, meta = mgr.restore({"acc": jnp.zeros(())})
+                return state, meta["step"]
+            return make_state
+
+        make_state = make_state_for(mgr)
+
+        def step_fn(state, step):
+            if step in fail_at:
+                fail_at.discard(step)
+                raise SimulatedFailure(f"preempted at {step}")
+            return {"acc": state["acc"] + step}
+
+        _, step, failures = run_with_restarts(
+            make_state, step_fn, mgr, total_steps=8, checkpoint_every=2,
+            max_failures=3, backoff_base=0.001, backoff_max=0.004,
+            backoff_jitter=0.5, seed=11,
+            on_restart=lambda s, f, w: restarts.append((s, f, w)),
+            sleep=slept.append)
+        assert failures == 2 and step == 8
+        # each restart surfaced the wait it actually slept, and the waits
+        # follow the seeded schedule exactly
+        want = [restart_backoff(k, base=0.001, cap=0.004, jitter=0.5,
+                                seed=11) for k in (1, 2)]
+        assert slept == want
+        assert [w for (_, _, w) in restarts] == want
+        assert [f for (_, f, _) in restarts] == [1, 2]
+
+        # a legacy two-argument callback keeps working
+        fail_at.add(2)
+        mgr2 = CheckpointManager(str(tmp_path / "b"), async_save=False)
+        run_with_restarts(
+            make_state_for(mgr2), step_fn, mgr2, total_steps=8,
+            checkpoint_every=2, max_failures=3,
+            on_restart=lambda s, f: legacy.append((s, f)))
+        assert legacy == [(2, 1)]
+
     def test_watchdog_flags_stragglers(self):
         from repro.runtime.failover import StepWatchdog
 
