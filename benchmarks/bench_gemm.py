@@ -25,7 +25,8 @@ from repro.core import dd, mp, ozaki
 from repro.core.accuracy import max_rel_err
 from repro.core.gemm import matmul
 from repro.kernels.ref import ddgemm_ref, qdgemm_ref
-from .common import block, dump_json, emit, rand_dd, record_failure, time_fn
+from .common import (LAST_TIMING, block, dump_json, emit, rand_dd,
+                     record_failure, time_fn)
 
 # bf16-sliced conformance floor is coarser than the f64-limb backends'
 _SMOKE_TOL = {"dd": 2.0 ** -88, "qd": 2.0 ** -185}
@@ -115,11 +116,16 @@ def _mesh_sweep(mesh_arg: str):
     """SUMMA topology sweep: per-mesh GEMM rates into BENCH_GEMM.json.
 
     ``mesh_arg``: comma-separated ``RxC`` topologies (``--mesh 1x1,2x2``).
-    Topologies needing more devices than the process has are reported as
-    skipped rows rather than silently dropped (CI's ``sharding`` job forces
-    4 host devices so the standard sweep fills in).  Rates on forced host
-    devices measure the distribution overhead, not real multi-chip speedup
-    — the row's value is the per-topology *trajectory* across commits.
+    Each topology times BOTH panel schedules — the ppermute ring (default)
+    and the legacy masked-psum broadcast — as separate
+    ``gemm_mesh/RxC/{ring,psum}`` rows (median-of-repeats + IQR), with the
+    ring row carrying ``speedup_vs_psum`` so the artifact tracks the comm
+    rewrite's win per topology.  Topologies needing more devices than the
+    process has are reported as skipped rows rather than silently dropped
+    (CI's ``sharding`` job forces 4 host devices so the standard sweep
+    fills in).  Rates on forced host devices measure the distribution
+    overhead, not real multi-chip speedup — the row's value is the
+    per-topology *trajectory* across commits.
     """
     import jax
     from jax.sharding import Mesh
@@ -141,13 +147,33 @@ def _mesh_sweep(mesh_arg: str):
             continue
         mesh = Mesh(np.array(jax.devices()[: rows * cols]).reshape(
             rows, cols), ("rows", "cols"))
-        got = block(matmul(a, b, backend="xla", mesh=mesh))
-        err = max_rel_err(got, want)
-        t = time_fn(lambda: block(matmul(a, b, backend="xla", mesh=mesh)),
-                    warmup=0, iters=3)
-        emit(f"gemm_mesh/{rows}x{cols}/n={n}", t * 1e6,
-             f"gflops={flops / t / 1e9:.4f};rel_err={err:.3e};"
-             f"devices={rows * cols}")
+
+        def call(comm):
+            return block(matmul(a, b, backend="xla", mesh=mesh, comm=comm))
+
+        # warm + conformance-check both schedules before any timing
+        errs = {c: max_rel_err(call(c), want) for c in ("psum", "ring")}
+        # the two schedules' samples are INTERLEAVED (psum, ring, psum,
+        # ring, ...): container CPU throttling drifts over seconds, so
+        # timing one schedule's full repeat block after the other's puts
+        # the drift entirely into the speedup column — alternating pairs
+        # it out of the comparison
+        samples = {c: [] for c in errs}
+        for _ in range(9):
+            for c in errs:
+                samples[c].append(time_fn(call, c, warmup=0, iters=1))
+        meds = {c: float(np.median(s)) for c, s in samples.items()}
+        for comm, t in meds.items():
+            q1, q3 = np.percentile(samples[comm], [25.0, 75.0])
+            LAST_TIMING.clear()
+            LAST_TIMING.update(iters=len(samples[comm]),
+                               median_us=t * 1e6,
+                               iqr_us=float(q3 - q1) * 1e6)
+            derived = (f"gflops={flops / t / 1e9:.4f};"
+                       f"rel_err={errs[comm]:.3e};devices={rows * cols}")
+            if comm == "ring":
+                derived += f";speedup_vs_psum={meds['psum'] / t:.3f}"
+            emit(f"gemm_mesh/{rows}x{cols}/{comm}/n={n}", t * 1e6, derived)
 
 
 def run(mesh: str = ""):

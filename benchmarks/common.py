@@ -13,6 +13,11 @@ import numpy as np
 ROWS = []
 RESULTS = []  # structured mirror of ROWS for JSON artifacts
 
+# repeat stats of the most recent time_fn call; emit() merges them into
+# its row (and clears them, so rows that were never timed — projections,
+# skip markers — cannot inherit a stale spread)
+LAST_TIMING: dict = {}
+
 
 def _parse_derived(derived: str) -> dict:
     out = {}
@@ -28,6 +33,12 @@ def _parse_derived(derived: str) -> dict:
 
 
 def emit(name: str, us_per_call: float, derived: str):
+    stats = dict(LAST_TIMING)
+    LAST_TIMING.clear()
+    if stats:
+        derived = derived + ";" + ";".join(
+            f"{k}={v:.1f}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in stats.items())
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     RESULTS.append({"name": name, "us_per_call": us_per_call,
@@ -71,8 +82,17 @@ def dump_json(path: str, prefix: str | None = None) -> str:
     return path
 
 
-def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall seconds per call (fn must block, e.g. via block_until_ready)."""
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall seconds per call (fn must block, e.g. block_until_ready).
+
+    Defaults to 5 repeats — containerized CPU throttling swings single
+    samples by 2-3x, so every standing-sweep row is a median-of-repeats
+    (cells that are minutes-per-call, e.g. interpret-mode Pallas, may
+    pass a smaller ``iters`` explicitly).  The repeat spread lands in
+    ``LAST_TIMING`` as ``{iters, median_us, iqr_us}``; the next ``emit``
+    call merges it into its row, so the artifact records both the center
+    and the noise of every timing.
+    """
     for _ in range(warmup):
         fn(*args)
     times = []
@@ -80,7 +100,16 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
         t0 = time.perf_counter()
         fn(*args)
         times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+    med = float(np.median(times))
+    if len(times) > 1:
+        q1, q3 = np.percentile(times, [25.0, 75.0])
+        iqr = float(q3 - q1)
+    else:
+        iqr = 0.0
+    LAST_TIMING.clear()
+    LAST_TIMING.update(iters=len(times), median_us=med * 1e6,
+                       iqr_us=iqr * 1e6)
+    return med
 
 
 def block(x):

@@ -96,13 +96,69 @@ def mask_split(a):
     return hi, lo
 
 
+# Scale-aware operand rescue (extreme-scale exactness).  The mask split's
+# low part has magnitude down to 2^(e-52); for |a| below ~2^-970 it lands
+# in the subnormal range, which XLA:CPU flushes to zero — silently losing
+# the m2/m4 partial products (measured: up to ~2^-25 relative error on
+# dd.mul for operand pairs like 2^1005 x 2^-1005 whose PRODUCT is
+# perfectly representable).  The rescue pre-scales each operand by an
+# exact power of two into a safe band and unscales the result; in the
+# normal band the factor is exactly 1.0, so in-range results are
+# bit-identical to the unscaled computation.
+#
+# Band arithmetic (f64; f32 analogous with p=23, emax=127):
+#   * operands with |x| < 2^-484 scale UP by 2^512, |x| > 2^484 scale DOWN
+#     by 2^-512;
+#   * every reachable scaled-exponent pair sum lies in [-968, 1023], so no
+#     partial product overflows and none is flushed beyond its ordinary
+#     <= 1/2 ulp rounding allowance (pairs summing below -968 have
+#     products whose dd tail is sub-representable anyway — inherent);
+#   * unscaling applies the > 1 inverse factors BEFORE the < 1 ones, so a
+#     huge x tiny product never transits the subnormal range on its way
+#     back (and the combined factor 2^{+-1024}, which is not itself
+#     representable, is never formed).
+_RESCUE = {
+    jnp.dtype(jnp.float64): (2.0 ** -484, 2.0 ** 484, 2.0 ** 512,
+                             2.0 ** -512),
+    jnp.dtype(jnp.float32): (2.0 ** -60, 2.0 ** 60, 2.0 ** 64, 2.0 ** -64),
+}
+
+
+def _rescue(x):
+    """(x * s, 1/s) with s an exact pow2 moving x into the safe band.
+
+    s == 1 exactly for in-band operands; NaN/Inf/0 pass through (the
+    comparisons are False on NaN, Inf scales down but stays Inf, 0 scales
+    up and stays 0).
+    """
+    tiny, huge, up, down = _RESCUE[jnp.dtype(x.dtype)]
+    ax = jnp.abs(x)
+    s = jnp.where(ax < tiny, up, jnp.where(ax > huge, down, 1.0))
+    inv = jnp.where(ax < tiny, down, jnp.where(ax > huge, up, 1.0))
+    return x * s, inv
+
+
+def _unscale(x, inv_a, inv_b):
+    """x * inv_a * inv_b, > 1 factors first (no intermediate under/overflow)."""
+    one = jnp.ones((), x.dtype)
+    x = x * jnp.maximum(inv_a, one)
+    x = x * jnp.maximum(inv_b, one)
+    x = x * jnp.minimum(inv_a, one)
+    return x * jnp.minimum(inv_b, one)
+
+
 def two_prod(a, b):
     """Near-exact multiplication: p + e == a*b up to TWO_PROD_RELERR[dtype].
 
     The four partial products of the mask splits are (near-)exactly
     representable, so assembling them with two_sum chains is immune to fma
     contraction (see module docstring).  ``p`` is within 1 ulp of fl(a*b).
+    Operands are pow2-rescued into the safe exponent band first, so the
+    bound holds out to the edges of the representable range (see _RESCUE);
+    in-band operands compute bit-identically to the unscaled algorithm.
     """
+    a, inv_a = _rescue(a)
+    b, inv_b = _rescue(b)
     ah, al = mask_split(a)
     bh, bl = mask_split(b)
     m1 = ah * bh  # exact
@@ -113,7 +169,7 @@ def two_prod(a, b):
     s, e2 = two_sum(s, m3)
     s, e3 = two_sum(s, m4)
     e = e1 + (e2 + e3)
-    return s, e
+    return _unscale(s, inv_a, inv_b), _unscale(e, inv_a, inv_b)
 
 
 def _mask_keep(dtype, keep: int):
@@ -140,19 +196,37 @@ def two_prod_terms(a, b):
     many (f64), so its second factor is re-split; every returned term is an
     exactly-representable product, keeping the decomposition both exact and
     fma-contraction-proof.  Used by the quad-word layer, where two_prod's
-    2^-105 slack would dominate the error budget.
+    2^-105 slack would dominate the error budget.  Operands get the same
+    pow2 rescue as two_prod (each term is unscaled individually — exact,
+    since the factors are powers of two), so the decomposition stays exact
+    out to the edges of the representable range.
     """
+    terms, inv_a, inv_b = _scaled_terms(a, b)
+    return [_unscale(t, inv_a, inv_b) for t in terms]
+
+
+def _scaled_terms(a, b):
+    """Exact product terms of the rescued operands, plus the inverses."""
+    a, inv_a = _rescue(a)
+    b, inv_b = _rescue(b)
     ah, al = mask_split(a)
     bh, bl = mask_split(b)
     if jnp.dtype(a.dtype) == jnp.float64:
         blh, bll = _mask_split_keep(bl, 12)  # 27-bit al x {13, 14}-bit halves
-        return [ah * bh, ah * bl, al * bh, al * blh, al * bll]
-    return [ah * bh, ah * bl, al * bh, al * bl]  # f32: 12/12 split, all exact
+        terms = [ah * bh, ah * bl, al * bh, al * blh, al * bll]
+    else:
+        terms = [ah * bh, ah * bl, al * bh, al * bl]  # f32: 12/12, all exact
+    return terms, inv_a, inv_b
 
 
 def two_prod_exact(a, b):
-    """Exact two_prod: p + e == a*b exactly (distilled from exact terms)."""
-    terms = two_prod_terms(a, b)
+    """Exact two_prod: p + e == a*b exactly (distilled from exact terms).
+
+    Distills in the rescued exponent band and unscales only the final
+    (p, e) pair: unscaling the raw terms individually could flush a small
+    term that the distilled error limb would have absorbed losslessly.
+    """
+    terms, inv_a, inv_b = _scaled_terms(a, b)
     for _ in range(3):  # vecsum sweeps converge the fixed-size expansion
         out = [None] * len(terms)
         s = terms[-1]
@@ -167,4 +241,5 @@ def two_prod_exact(a, b):
         e, r = two_sum(e, t)
         # r is zero after convergence; add it anyway to keep exactness
         e = e + r
-    return quick_two_sum(terms[0], e)
+    p, e = quick_two_sum(terms[0], e)
+    return _unscale(p, inv_a, inv_b), _unscale(e, inv_a, inv_b)

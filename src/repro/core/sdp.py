@@ -440,7 +440,9 @@ def solve_sdp(prob: SDPProblem, *, precision: str = "binary128",
     Passing ``mesh=`` (plus optional ``shard_axis``/``shard_axis_n``)
     distributes every Schur-stack GEMM — including the vmap-batched
     per-constraint ``X @ (A_j Z^-1)`` stack — over a 2-D device mesh via
-    the engine's SUMMA path (DESIGN.md §11).
+    the engine's SUMMA path (DESIGN.md §11); ``comm=`` picks the panel
+    schedule (default ppermute ring) and ``k_stream=`` adds host-side
+    out-of-core K streaming for Schur stacks too deep to hold per-device.
     """
     ops = _ops(precision, gemm_overrides)
     if tol_gap is None:

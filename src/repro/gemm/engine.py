@@ -14,16 +14,23 @@ engine is limb-count generic:
     2-D distribution via ``shard_map``: C's row blocks shard over
     ``plan.shard_axis``, its column blocks over ``plan.shard_axis_n``, and
     a ``lax.fori_loop`` walks the K dimension in ``k_panel``-deep steps,
-    broadcasting the owning device's A row-panel along the column axis and
-    B column-panel along the row axis per step (an exact masked-psum
-    broadcast — non-owners contribute zero limbs) and accumulating into a
-    local C' block in tier arithmetic.  This is the software analogue of
-    the paper's DDR→BRAM panel streaming, with the fori_loop carry playing
-    the double-buffered accumulator; the output *stays* 2-D block-sharded
-    (``P(axis_m, axis_n)``) — no all-gather on the result, matching the
-    paper's Feed/Drain streaming where C' tiles drain independently.  A
-    1-axis mesh degenerates to the old row-sharded layout, and batched +
-    sharded calls compose ``vmap`` outside the ``shard_map``.
+    replicating the owning device's A row-panel along the column axis and
+    B column-panel along the row axis per step and accumulating into a
+    local C' block in tier arithmetic.  Panel movement is a double-
+    buffered ``lax.ppermute`` ring by default (``plan.comm="ring"``: the
+    next step's panels travel hop-by-hop while the current dot runs; the
+    loop is seeded by pre-rotating panel 0 — Cannon-style starting
+    alignment), with the legacy exact masked-psum broadcast selectable as
+    ``comm="psum"``; the two schedules are bit-identical.  This is the
+    software analogue of the paper's DDR→BRAM panel streaming; the output
+    *stays* 2-D block-sharded (``P(axis_m, axis_n)``) — no all-gather on
+    the result, matching the paper's Feed/Drain streaming where C' tiles
+    drain independently.  A 1-axis mesh degenerates to the old
+    row-sharded layout, batched + sharded calls compose ``vmap`` outside
+    the ``shard_map``, and ``plan.k_stream`` adds host-side out-of-core K
+    streaming on top (chunks of A/B feed through the runner while the C'
+    accumulator stays device-resident — bit-identical to the unstreamed
+    run).
 
 Backend kernels per tier: the Pallas systolic tiles (``kernels/ddgemm.py``
 / ``kernels/qdgemm.py`` — same tile schedule, 2 vs 4 limb planes), the
@@ -80,8 +87,34 @@ def _pad_to(x, rows, cols):
     return jnp.pad(x, pad)
 
 
+# optimization_barrier has no batching rule in jax 0.4.x; it is identity
+# on values, so vmap passes straight through (the batched-GEMM vmap over
+# _pad would otherwise raise NotImplementedError)
+from jax.interpreters import batching as _batching  # noqa: E402
+
+if jax.lax.optimization_barrier_p not in _batching.primitive_batchers:
+    def _ob_batch(vals, dims):
+        return jax.lax.optimization_barrier_p.bind(*vals), dims
+
+    _batching.primitive_batchers[jax.lax.optimization_barrier_p] = _ob_batch
+
+
 def _pad(x, rows, cols):
-    return mp.map_limbs(lambda l: _pad_to(l, rows, cols), x)
+    r, c = x.shape[-2:]
+    if r == rows and c == cols:
+        return x
+    padded = mp.map_limbs(lambda l: _pad_to(l, rows, cols), x)
+    # the barrier pins the padded limbs as opaque runtime values.  Without
+    # it, operands that are trace-time CONSTANTS under an outer jit lose
+    # bit-reproducibility: XLA's constant folder refuses to fold through
+    # the output-enlarging pad, and the surviving constant-fed fusions
+    # rewrite the downstream error-free-transformation chains
+    # value-changingly (~1e-17 relative drift vs the same call un-jitted,
+    # first seen on interpret-mode ozaki-pallas).  Pinning the pad output
+    # makes the compiled graph per-op-faithful, so jit(const-closure),
+    # jit(args), and eager all produce identical limbs.
+    return mp.from_limbs(jax.lax.optimization_barrier(
+        tuple(mp.limbs(padded))))
 
 
 # --------------------------------------------------------------------------
@@ -371,6 +404,24 @@ _apply_epilogue_jit = jax.jit(_apply_epilogue)
 # --------------------------------------------------------------------------
 
 
+def _summa_geometry(plan: GemmPlan, k: int):
+    """(pr, pc, lcm, kp): mesh extents and the effective SUMMA panel depth.
+
+    One definition for runner and K-streamer: the host-side out-of-core
+    loop must slice its chunks on the very panel grid the runner walks,
+    or streamed and unstreamed execution would fold different panel
+    products (bit-exactness would be lost).
+    """
+    mesh, ax_m, ax_n = plan.mesh, plan.shard_axis, plan.shard_axis_n
+    pr = mesh.shape[ax_m] if ax_m is not None else 1
+    pc = mesh.shape[ax_n] if ax_n is not None else 1
+    lcm = math.lcm(pr, pc)
+    # panel depth never exceeds a device's K chunk, so a small-K problem
+    # does not pad its K dimension up to a full (oversized) panel
+    kp = max(1, min(plan.k_panel or plan.bk, -(-k // lcm)))
+    return pr, pc, lcm, kp
+
+
 def _summa_runner(plan: GemmPlan, m: int, k: int, n: int, nl: int):
     """Build the ``shard_map``-wrapped SUMMA loop for one global shape.
 
@@ -382,28 +433,39 @@ def _summa_runner(plan: GemmPlan, m: int, k: int, n: int, nl: int):
         ``shard_axis_n`` (Pc);
       * C' blocks live at ``P(shard_axis, shard_axis_n)`` and never move.
 
-    Each of the ``Kpad / k_panel`` K-steps broadcasts the owning column's
+    Each of the ``Kpad / k_panel`` K-steps replicates the owning column's
     A row-panel along ``shard_axis_n`` and the owning row's B column-panel
-    along ``shard_axis`` — a masked ``psum`` (non-owners contribute exact
-    zero limbs, so the broadcast is exact in tier arithmetic) — then folds
-    the local ``(m_loc, kp) @ (kp, n_loc)`` panel product into the
-    fori_loop-carried accumulator with a tier add.  This is the engine's
-    analogue of the paper's DDR→BRAM panel streaming: the carry is the
-    BRAM-resident C' tile, the per-step panels are the streamed operands.
+    along ``shard_axis``, then folds the local ``(m_loc, kp) @ (kp, n_loc)``
+    panel product into the loop-carried accumulator with a tier add.  This
+    is the engine's analogue of the paper's DDR→BRAM panel streaming: the
+    carry is the BRAM-resident C' tile, the per-step panels are the
+    streamed operands.  Two panel-movement schedules (``plan.comm``):
 
-    Returns ``(run, (mpad, npad, kpad))`` where ``run(*a_limbs, *b_limbs)``
-    maps padded 2-D operands to the padded, still-2-D-sharded product.
+      * ``"ring"`` (default) — a ``lax.ppermute`` ring: the owner injects
+        its panel and it travels hop-by-hop around the axis (keep-selects
+        at each hop), pure data movement with no reduction arithmetic, and
+        the loop carry **double-buffers** the in-flight panel — the hops
+        for step ``t+1`` are issued before step ``t``'s dot retires, so
+        communication overlaps compute.  The loop is seeded by
+        pre-rotating panel 0 into the buffers (Cannon-style starting
+        alignment).
+      * ``"psum"`` — the legacy masked all-reduce (non-owners contribute
+        exact zero limbs), kept selectable as the conformance reference:
+        both schedules deliver bit-identical panels and fold them in the
+        same global K order, so ring output is bit-identical to psum.
+
+    Returns ``(run, (mpad, npad, kpad))`` where
+    ``run(*a_limbs, *b_limbs, *acc_limbs)`` maps padded 2-D operands plus
+    an initial (padded, block-sharded) accumulator to the padded,
+    still-2-D-sharded ``acc + A @ B``.  Threading the accumulator through
+    as an operand is what lets the out-of-core K-streamer continue the
+    *same* left-to-right panel fold across host-sliced chunks.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     mesh, ax_m, ax_n = plan.mesh, plan.shard_axis, plan.shard_axis_n
-    pr = mesh.shape[ax_m] if ax_m is not None else 1
-    pc = mesh.shape[ax_n] if ax_n is not None else 1
-    lcm = math.lcm(pr, pc)
-    # panel depth never exceeds a device's K chunk, so a small-K problem
-    # does not pad its K dimension up to a full (oversized) panel
-    kp = max(1, min(plan.k_panel or plan.bk, -(-k // lcm)))
+    pr, pc, lcm, kp = _summa_geometry(plan, k)
     # K pads so every device's contiguous chunk is whole panels: A splits K
     # over the column axis, B over the row axis, so both chunkings must be
     # panel-aligned (zero padding is exact in multi-limb arithmetic)
@@ -413,15 +475,16 @@ def _summa_runner(plan: GemmPlan, m: int, k: int, n: int, nl: int):
     steps = kpad // kp
 
     def local(*limbs):
-        al = mp.from_limbs(limbs[:nl])       # (mpad/pr, ka)
-        bl = mp.from_limbs(limbs[nl:])       # (kb, npad/pc)
+        al = mp.from_limbs(limbs[:nl])           # (mpad/pr, ka)
+        bl = mp.from_limbs(limbs[nl:2 * nl])     # (kb, npad/pc)
+        acc0 = mp.from_limbs(limbs[2 * nl:])     # (mpad/pr, npad/pc)
         m_loc, n_loc = al.shape[0], bl.shape[1]
         ci = jax.lax.axis_index(ax_n) if ax_n is not None else None
         ri = jax.lax.axis_index(ax_m) if ax_m is not None else None
 
-        def bcast(panel, owner, me, axis_name):
-            """Broadcast the owner's panel along ``axis_name`` (exact:
-            non-owners contribute zero limbs to the psum)."""
+        def bcast_psum(panel, owner, me, axis_name):
+            """Replicate the owner's panel along ``axis_name`` as a masked
+            all-reduce (exact: non-owners contribute zero limbs)."""
             if axis_name is None:
                 return panel
             return mp.map_limbs(
@@ -429,8 +492,34 @@ def _summa_runner(plan: GemmPlan, m: int, k: int, n: int, nl: int):
                     jnp.where(me == owner, l, jnp.zeros_like(l)),
                     axis_name), panel)
 
-        def step(t, carry):
-            acc = mp.from_limbs(carry)
+        def bcast_ring(panel, owner, me, axis_name, size):
+            """Replicate the owner's panel along ``axis_name`` by walking
+            it around a ``ppermute`` ring: at hop ``s`` the device at ring
+            distance ``s`` downstream of the owner latches the in-flight
+            panel and keeps forwarding it.  Pure data movement + selects —
+            no reduction arithmetic — and each hop is one neighbor edge,
+            so per-link traffic is one panel per step regardless of the
+            axis size (vs the all-reduce's 2(size-1) panel transits)."""
+            if axis_name is None or size == 1:
+                return panel
+            dist = (me - owner) % size
+            perm = [(s, (s + 1) % size) for s in range(size)]
+            # limbs coalesced into ONE buffer so each hop is a single wire
+            # message (stack/unstack moves no bits, so conformance with
+            # the per-limb psum path is unaffected); non-owners start with
+            # their own (wrong) local slice, but a device at distance s
+            # latches the in-flight value exactly at hop s — forwarded
+            # from distance s-1, which latched the true panel one hop
+            # earlier — so stale slices never propagate
+            held = jnp.stack(tuple(mp.limbs(panel)))
+            for s in range(1, size):
+                fwd = jax.lax.ppermute(held, axis_name, perm)
+                held = jnp.where(dist == s, fwd, held)
+            return mp.from_limbs(tuple(held[i] for i in range(nl)))
+
+        def fetch(t):
+            """Slice + replicate the step-``t`` panels (both schedules
+            deliver bit-identical panels; only the wire pattern differs)."""
             g = t * kp                          # global K offset of panel t
             own_a, off_a = g // ka, g % ka      # column owning A(:, panel t)
             own_b, off_b = g // kb, g % kb      # row owning B(panel t, :)
@@ -440,24 +529,62 @@ def _summa_runner(plan: GemmPlan, m: int, k: int, n: int, nl: int):
             bpan = mp.map_limbs(
                 lambda l: jax.lax.dynamic_slice(l, (off_b, 0), (kp, n_loc)),
                 bl)
-            apan = bcast(apan, own_a, ci, ax_n)
-            bpan = bcast(bpan, own_b, ri, ax_m)
+            if plan.comm == "ring":
+                apan = bcast_ring(apan, own_a, ci, ax_n, pc)
+                bpan = bcast_ring(bpan, own_b, ri, ax_m, pr)
+            else:
+                apan = bcast_psum(apan, own_a, ci, ax_n)
+                bpan = bcast_psum(bpan, own_b, ri, ax_m)
+            return apan, bpan
+
+        def hooks(apan, bpan, t):
             # chaos hooks: a "summa.panel.*" injection zeroes the chosen
-            # K-step's broadcast panel (a lost shard contribution); inert
-            # identity without an armed FaultPlan, and inject() drops the
-            # _summa_runner_jit cache so faulty traces stay in scope
-            apan = _faults.zero_panel("summa.panel.a", apan, t)
-            bpan = _faults.zero_panel("summa.panel.b", bpan, t)
-            acc = mp.add(acc, _execute_2d(plan, apan, bpan))
+            # K-step's panel AS USED (a lost broadcast / dropped ring
+            # hop); inert identity without an armed FaultPlan, and
+            # inject() drops the _summa_runner_jit cache so faulty traces
+            # stay in scope
+            return (_faults.zero_panel("summa.panel.a", apan, t),
+                    _faults.zero_panel("summa.panel.b", bpan, t))
+
+        if plan.comm == "ring":
+            def step(t, carry):
+                acc_l, ap_l, bp_l = carry
+                # issue the NEXT panel's ring hops before this step's dot:
+                # the in-flight ppermute overlaps the compute (the double
+                # buffer is the loop carry)
+                nxt_a, nxt_b = fetch(t + 1)
+                apan, bpan = hooks(mp.from_limbs(ap_l),
+                                   mp.from_limbs(bp_l), t)
+                acc = mp.add(mp.from_limbs(acc_l),
+                             _execute_2d(plan, apan, bpan))
+                return (tuple(mp.limbs(acc)), tuple(mp.limbs(nxt_a)),
+                        tuple(mp.limbs(nxt_b)))
+
+            a0, b0 = fetch(jnp.asarray(0))  # pre-rotate to start alignment
+            acc_l, ap_l, bp_l = jax.lax.fori_loop(
+                0, steps - 1, step,
+                (tuple(mp.limbs(acc0)), tuple(mp.limbs(a0)),
+                 tuple(mp.limbs(b0))))
+            # last step peeled: nothing left to prefetch, so the whole
+            # schedule issues exactly `steps` panel broadcasts (same wire
+            # traffic count as the psum schedule, minus the replication)
+            apan, bpan = hooks(mp.from_limbs(ap_l), mp.from_limbs(bp_l),
+                               steps - 1)
+            acc = mp.add(mp.from_limbs(acc_l), _execute_2d(plan, apan, bpan))
             return tuple(mp.limbs(acc))
 
-        z = mp.zeros((m_loc, n_loc), plan.precision, dtype=limbs[0].dtype)
-        return jax.lax.fori_loop(0, steps, step, tuple(mp.limbs(z)))
+        def step(t, carry):
+            apan, bpan = hooks(*fetch(t), t)
+            acc = mp.add(mp.from_limbs(carry),
+                         _execute_2d(plan, apan, bpan))
+            return tuple(mp.limbs(acc))
+
+        return jax.lax.fori_loop(0, steps, step, tuple(mp.limbs(acc0)))
 
     blk = P(ax_m, ax_n)
     run = shard_map(
         local, mesh=mesh,
-        in_specs=(blk,) * (2 * nl),
+        in_specs=(blk,) * (3 * nl),
         # the output stays 2-D block-sharded: each device drains its own C'
         # block, no all-gather — consumers slice or keep computing
         # shard-local (the paper's independent per-PE Feed/Drain)
@@ -485,12 +612,16 @@ def _execute_sharded(plan: GemmPlan, a, b):
     nl = mp.nlimbs(a)
     m, k = a.shape[-2:]
     n = b.shape[-1]
+    if plan.k_stream is not None and k > plan.k_stream:
+        return _execute_k_stream(plan, a, b)
     run, (mpad, npad, kpad) = _summa_runner_jit(plan, plan.mesh, m, k, n,
                                                 nl)
 
     def run2d(x, y):
+        z = mp.zeros((mpad, npad), plan.precision,
+                     dtype=mp.limbs(x)[0].dtype)
         out = run(*mp.limbs(_pad(x, mpad, kpad)),
-                  *mp.limbs(_pad(y, kpad, npad)))
+                  *mp.limbs(_pad(y, kpad, npad)), *mp.limbs(z))
         if (mpad, npad) == (m, n):
             return mp.from_limbs(out)  # keeps the 2-D sharded layout
         return mp.from_limbs([l[:m, :n] for l in out])
@@ -498,6 +629,57 @@ def _execute_sharded(plan: GemmPlan, a, b):
     if len(a.shape) > 2 or len(b.shape) > 2:
         # batched + sharded: vmap composes OUTSIDE the shard_map — each
         # batch element runs the same SUMMA loop on the same mesh
+        return _execute_batched(plan, a, b, inner=run2d)
+    return run2d(a, b)
+
+
+def _execute_k_stream(plan: GemmPlan, a, b):
+    """Host-side out-of-core K streaming through the sharded SUMMA runner.
+
+    The host slices A's columns / B's rows into ``k_stream``-deep chunks
+    and feeds each through the runner, threading the block-sharded C'
+    accumulator from chunk to chunk as the runner's carry operand — the
+    software analogue of the paper's DDR-resident operand stream: only one
+    chunk's worth of A/B panels is in flight at a time, while C' stays
+    device-resident across the whole K walk.
+
+    Bit-exactness vs the unstreamed run is by construction:
+
+      * the chunk width rounds up to a multiple of the panel depth (and to
+        at least one whole panel round, ``kp * lcm(pr, pc)``), so streamed
+        panels slice at exactly the unstreamed run's global K offsets;
+      * the per-chunk plan pins ``k_panel`` to the global run's effective
+        panel depth, so a short tail chunk cannot re-derive a smaller one;
+      * the tail chunk zero-pads host-side up to the common chunk width —
+        zero panels fold as exact no-ops in tier arithmetic (and every
+        chunk reuses the single compiled runner);
+      * the carry threads through the runner, so the accumulator performs
+        the SAME left-to-right panel fold as one unstreamed call.
+    """
+    nl = mp.nlimbs(a)
+    m, k = a.shape[-2:]
+    n = b.shape[-1]
+    _, _, lcm, kp = _summa_geometry(plan, k)
+    ks = max(_round_up(plan.k_stream, kp), kp * lcm)
+    sub = plan.with_(k_stream=None, k_panel=kp)
+    run, (mpad, npad, kpad) = _summa_runner_jit(sub, sub.mesh, m, ks, n,
+                                                nl)
+
+    def run2d(x, y):
+        carry = mp.zeros((mpad, npad), plan.precision,
+                         dtype=mp.limbs(x)[0].dtype)
+        for s in range(0, k, ks):
+            xc = mp.map_limbs(lambda l: l[:, s:s + ks], x)
+            yc = mp.map_limbs(lambda l: l[s:s + ks, :], y)
+            carry = mp.from_limbs(run(
+                *mp.limbs(_pad(xc, mpad, kpad)),
+                *mp.limbs(_pad(yc, kpad, npad)),
+                *mp.limbs(carry)))
+        if (mpad, npad) == (m, n):
+            return carry
+        return mp.from_limbs([l[:m, :n] for l in mp.limbs(carry)])
+
+    if len(a.shape) > 2 or len(b.shape) > 2:
         return _execute_batched(plan, a, b, inner=run2d)
     return run2d(a, b)
 
@@ -553,7 +735,8 @@ def _fallback_plan(plan: GemmPlan, backend: str, m: int, k: int,
         backend=backend, batch_shape=plan.batch_shape,
         interpret=plan.interpret, platform=plan.platform, mesh=plan.mesh,
         shard_axis=plan.shard_axis, shard_axis_n=plan.shard_axis_n,
-        k_panel=plan.k_panel, check=plan.check, use_cache=False)
+        k_panel=plan.k_panel, comm=plan.comm, k_stream=plan.k_stream,
+        check=plan.check, use_cache=False)
 
 
 def _dispatch_with_failover(plan: GemmPlan, a, b, alpha, beta, c,
@@ -618,7 +801,7 @@ def _dispatch_with_failover(plan: GemmPlan, a, b, alpha, beta, c,
 
 
 def execute(plan: GemmPlan, a, b, *, alpha=None, beta=None, c=None,
-            check: Optional[str] = None):
+            check: Optional[str] = None, k_stream: Optional[int] = None):
     """Run C = alpha * (A @ B) + beta * C under a plan.
 
     A: (..., m, k), B: (..., k, n).  ``alpha``/``beta`` (python floats or
@@ -642,12 +825,26 @@ def execute(plan: GemmPlan, a, b, *, alpha=None, beta=None, c=None,
     panels).  Guarded raising degrades to propagation under an outer jit
     (flags are tracers there); see ``gemm.guard``.
 
+    ``k_stream`` (per-call override of the plan field) turns on host-side
+    out-of-core K streaming on sharded plans: A/B feed through the SUMMA
+    runner in ``k_stream``-deep K chunks while the block-sharded C'
+    accumulator stays device-resident, and the result is bit-identical to
+    the unstreamed call (see ``_execute_k_stream``).
+
     Backend compile/run failures retry down the plan's declared fallback
     chain (``ozaki-pallas → ozaki → xla``), quarantining each failed
     backend in the plan cache; exhaustion raises
     :class:`~repro.runtime.faults.BackendExecutionError`.
     """
     check = guard.resolve_check(check, plan)
+    if k_stream is not None:
+        if plan.mesh is None:
+            raise ValueError(
+                "k_stream= requires a sharded plan (mesh=): the out-of-"
+                "core K stream feeds chunks through the SUMMA runner")
+        if k_stream <= 0:
+            raise ValueError(f"k_stream must be positive, got {k_stream}")
+        plan = plan.with_(k_stream=k_stream)
     prec = mp.precision_of(a)
     if mp.precision_of(b) != prec:
         raise TypeError(f"operand tiers differ: {mp.precision_of(a)} vs "

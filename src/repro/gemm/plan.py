@@ -110,6 +110,8 @@ class GemmPlan:
     shard_axis: Optional[str] = None  # mesh axis sharding the M (row) dim
     shard_axis_n: Optional[str] = None  # mesh axis sharding the N (col) dim
     k_panel: Optional[int] = None     # SUMMA K-panel depth (default: bk)
+    comm: str = "ring"                # SUMMA panel movement: ring | psum
+    k_stream: Optional[int] = None    # host-side out-of-core K chunk depth
     mesh: Any = dataclasses.field(default=None, compare=False, repr=False)
     slice_dtype: Optional[str] = None  # ozaki operand slices (bf16 on TPU)
     acc_dtype: Optional[str] = None    # ozaki accumulator (f32 on TPU)
@@ -164,6 +166,8 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
               shard_axis: Optional[str] = None,
               shard_axis_n: Optional[str] = None,
               k_panel: Optional[int] = None,
+              comm: str = "ring",
+              k_stream: Optional[int] = None,
               slice_dtype=None, acc_dtype=None,
               n_slices: Optional[int] = None,
               target_bits: Optional[int] = None, full: Optional[bool] = None,
@@ -234,14 +238,19 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
         shard_axis, shard_axis_n = gemm_mesh_axes(
             mesh, m_axis=shard_axis, n_axis=shard_axis_n)
     if mesh is None and not (shard_axis is None and shard_axis_n is None
-                             and k_panel is None):
+                             and k_panel is None and k_stream is None):
         # a shard spec without a mesh would silently run unsharded — the
         # same dropped-operand failure mode the beta-without-c rule stops
         raise ValueError(
-            "shard_axis/shard_axis_n/k_panel require mesh= (without a "
-            "mesh there is nothing to shard over)")
+            "shard_axis/shard_axis_n/k_panel/k_stream require mesh= "
+            "(without a mesh there is nothing to shard or stream over)")
     if k_panel is not None and k_panel <= 0:
         raise ValueError(f"k_panel must be positive, got {k_panel}")
+    if comm not in ("ring", "psum"):
+        raise ValueError(f"unknown SUMMA comm schedule {comm!r}; "
+                         f"one of ('ring', 'psum')")
+    if k_stream is not None and k_stream <= 0:
+        raise ValueError(f"k_stream must be positive, got {k_stream}")
 
     # tuned blocks are looked up for the shape a device actually runs: a
     # sharded plan's per-device SUMMA panels are the (m/Pr, k, n/Pc) local
@@ -319,7 +328,8 @@ def make_plan(m: int, k: int, n: int, *, dtype=jnp.float64,
         platform=platform, precision=precision,
         batch="vmap" if batch_shape else "none",
         batch_shape=tuple(batch_shape), shard_axis=shard_axis,
-        shard_axis_n=shard_axis_n, k_panel=k_panel, mesh=mesh,
+        shard_axis_n=shard_axis_n, k_panel=k_panel, comm=comm,
+        k_stream=k_stream, mesh=mesh,
         slice_dtype=jnp.dtype(slice_dtype).name if slice_dtype else None,
         acc_dtype=jnp.dtype(acc_dtype).name if acc_dtype else None,
         n_slices=n_slices, slice_beta=slice_beta,
@@ -352,4 +362,5 @@ def replan_precision(plan: GemmPlan, m: int, k: int, n: int,
         interpret=plan.interpret, platform=plan.platform,
         mesh=plan.mesh, shard_axis=plan.shard_axis,
         shard_axis_n=plan.shard_axis_n, k_panel=plan.k_panel,
+        comm=plan.comm, k_stream=plan.k_stream,
         check=plan.check)

@@ -23,7 +23,10 @@ alpha=-1, beta=1, c=b)`` rides the fused alpha/beta epilogue, the batched
 (vmap) multi-RHS path, and 2-D SUMMA mesh sharding (a ``mesh=`` override
 distributes rows over ``shard_axis`` and RHS columns over
 ``shard_axis_n`` — batched + sharded composes in the same call) exactly
-like every other GEMM in the repo.  Everything per-iteration is jit-compiled once per
+like every other GEMM in the repo; ``comm=``/``k_stream=`` overrides
+select the SUMMA panel schedule (ppermute ring vs masked psum) and
+host-side out-of-core K streaming, and tier escalation re-plans carry
+both (``replan_precision``).  Everything per-iteration is jit-compiled once per
 (plan, tier) — pivots are traced JAX arrays end-to-end, so the pivoted
 correction solve lives inside the same jit as the update.
 """

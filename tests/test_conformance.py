@@ -298,6 +298,106 @@ def test_solver_multi_rhs_on_2d_mesh(solver_oracle, tmp_cache):
             64 * _SOLVER_N * ULP["dd"]
 
 
+# --------------------------------------------------------------------------
+# ring-vs-psum: the ppermute ring panel schedule must be BIT-IDENTICAL to
+# the legacy masked-psum broadcast (same panels, same fold order — PR 9's
+# conformance gate for the comm rewrite), plus the uneven-K and k_stream
+# exactness regressions
+# --------------------------------------------------------------------------
+
+# multi-device topologies only: on 1x1 both schedules degenerate to the
+# same no-comm loop
+_RING_MESHES = [(1, 2), (2, 1), (2, 2)]
+
+
+def _limbs_equal(x, y):
+    for lx, ly in zip(mp.limbs(x), mp.limbs(y)):
+        np.testing.assert_array_equal(np.asarray(lx), np.asarray(ly))
+
+
+def _comm_pair(m, k, n, mesh, precision="dd", **kw):
+    return tuple(
+        gemm.make_plan(m, k, n, backend="xla", precision=precision,
+                       mesh=mesh, comm=comm, use_cache=False, **kw)
+        for comm in ("ring", "psum"))
+
+
+@pytest.mark.sharding
+@pytest.mark.parametrize("rows,cols", _RING_MESHES)
+@pytest.mark.parametrize("precision", ["dd", "qd"])
+def test_ring_bit_identical_to_psum(rows, cols, precision, tmp_cache):
+    mesh = _mesh(rows, cols)
+    m, k, n = 13, 23, 9
+    a = _rand(precision, (m, k), seed=70)
+    b = _rand(precision, (k, n), seed=71)
+    ring, psum = _comm_pair(m, k, n, mesh, precision, k_panel=8)
+    _limbs_equal(gemm.execute(ring, a, b), gemm.execute(psum, a, b))
+
+
+@pytest.mark.sharding
+@pytest.mark.parametrize("rows,cols", _RING_MESHES)
+def test_ring_epilogue_and_batched_bit_identical(rows, cols, tmp_cache):
+    mesh = _mesh(rows, cols)
+    m, k, n = 13, 23, 9
+    a = _rand("dd", (2, m, k), seed=72)  # batched + sharded + epilogue
+    b = _rand("dd", (k, n), seed=73)
+    c = _rand("dd", (m, n), seed=74)
+    ring, psum = _comm_pair(m, k, n, mesh, "dd", k_panel=8,
+                            batch_shape=(2,))
+    _limbs_equal(
+        gemm.execute(ring, a, b, alpha=0.5, beta=-2.0, c=c),
+        gemm.execute(psum, a, b, alpha=0.5, beta=-2.0, c=c))
+
+
+@pytest.mark.sharding
+@pytest.mark.parametrize("k,k_panel", [
+    (23, 8),   # K not divisible by kp * lcm(Pr, Pc)
+    (3, 8),    # K smaller than one panel
+    (7, 16),   # K smaller than a panel round on every topology
+])
+def test_ring_uneven_k_bit_identical(k, k_panel, tmp_cache):
+    mesh = _mesh(2, 2)
+    m, n = 13, 9
+    a = _rand("dd", (m, k), seed=75)
+    b = _rand("dd", (k, n), seed=76)
+    ring, psum = _comm_pair(m, k, n, mesh, "dd", k_panel=k_panel)
+    got = gemm.execute(ring, a, b)
+    _limbs_equal(got, gemm.execute(psum, a, b))
+    want = qdgemm_ref(mp.promote(a, "qd"), mp.promote(b, "qd"))
+    assert _rel_err(mp.promote(got, "qd"), want) < 16 * max(k, 8) * ULP["dd"]
+
+
+@pytest.mark.sharding
+@pytest.mark.parametrize("k,k_stream", [
+    (23, 5),   # chunk not dividing K (and not panel-aligned: rounds up)
+    (23, 8),   # chunk == panel depth
+    (40, 16),  # several whole chunks + ragged tail
+])
+def test_k_stream_bit_identical_to_unstreamed(k, k_stream, tmp_cache):
+    mesh = _mesh(2, 2)
+    m, n = 13, 9
+    a = _rand("dd", (m, k), seed=77)
+    b = _rand("dd", (k, n), seed=78)
+    plan = gemm.make_plan(m, k, n, backend="xla", mesh=mesh, k_panel=8,
+                          use_cache=False)
+    whole = gemm.execute(plan, a, b)
+    _limbs_equal(gemm.execute(plan, a, b, k_stream=k_stream), whole)
+    # the plan-field spelling streams identically to the per-call override
+    planned = gemm.make_plan(m, k, n, backend="xla", mesh=mesh, k_panel=8,
+                             k_stream=k_stream, use_cache=False)
+    _limbs_equal(gemm.execute(planned, a, b), whole)
+
+
+@pytest.mark.sharding
+def test_k_stream_requires_mesh(tmp_cache):
+    plan = gemm.make_plan(8, 8, 8, backend="xla", use_cache=False)
+    a = _rand("dd", (8, 8), seed=79)
+    with pytest.raises(ValueError, match="k_stream"):
+        gemm.execute(plan, a, a, k_stream=4)
+    with pytest.raises(ValueError, match="mesh"):
+        gemm.make_plan(8, 8, 8, backend="xla", k_stream=4, use_cache=False)
+
+
 def test_qd_tiles_tune_independently(tmp_cache):
     # same bucket, different limb count -> different cache rows
     kd = gemm.cache_key("cpu", "float64", 100, 100, 100, "pallas", nlimbs=2)

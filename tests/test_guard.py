@@ -149,6 +149,57 @@ class TestSliceOverflow:
             assert gemm.guard.slice_overflow_limit(plan) is None
 
 
+class TestExtremeScaleExactness:
+    """dd arithmetic stays exact at extreme operand scales (PR 9 fix).
+
+    Formerly a documented caveat: the mask split's low part fell into the
+    flushed-to-zero subnormal range for operand magnitudes beyond ~2^±996,
+    silently costing up to ~2^-25 relative error — the efts pow2 rescue
+    now keeps two_prod within its 2^-104 bound there.  The non-sliced
+    backends therefore pass check="full" (the f64 shadow gate) on the very
+    operands TestSliceOverflow rejects for the sliced ones.
+    """
+
+    @pytest.mark.parametrize("ea,eb", [(1005, -1005), (1000, -1000),
+                                       (-1000, 0), (990, -990)])
+    def test_dd_mul_meets_bound_at_extreme_scales(self, ea, eb):
+        from fractions import Fraction
+
+        from repro.core import dd
+
+        rng = np.random.default_rng(11)
+        av = (rng.random(N * N) + 0.5) * 2.0 ** ea
+        bv = (rng.random(N * N) + 0.5) * 2.0 ** eb
+        p = dd.mul(dd.from_float(jnp.asarray(av)),
+                   dd.from_float(jnp.asarray(bv)))
+        hi, lo = np.asarray(p.hi), np.asarray(p.lo)
+        worst = 0.0
+        for i in range(N * N):
+            exact = Fraction(av[i]) * Fraction(bv[i])
+            got = Fraction(float(hi[i])) + Fraction(float(lo[i]))
+            worst = max(worst, abs(float((got - exact) / exact)))
+        # 2^-104 class, plus slack for the FTZ-inherent floor when the
+        # error limb itself sits near the subnormal boundary
+        inherent = 2.0 ** (-1021 - (ea + eb))  # flushed-limb scale / product
+        assert worst <= max(4 * 2.0 ** -104, 4 * inherent), \
+            f"dd.mul lost {worst:.3e} relative at scales 2^{ea} x 2^{eb}"
+
+    def test_full_check_passes_at_extreme_scale(self, tmp_cache):
+        # the shadow gate used to flag these operands as finite-but-wrong;
+        # with the rescue the xla backend's product survives check="full"
+        rng = np.random.default_rng(7)
+        a = mp.from_float(
+            jnp.asarray((rng.random((N, N)) + 0.5) * 2.0 ** 1005), "dd")
+        b = mp.from_float(
+            jnp.asarray((rng.random((N, N)) + 0.5) * 2.0 ** -1005), "dd")
+        plan = gemm.make_plan(N, N, N, backend="xla", use_cache=False)
+        out = gemm.execute(plan, a, b, check="full")
+        assert not _any_nonfinite(out)
+        want = np.asarray(mp.to_float(ddgemm_ref(a, b)))
+        got = np.asarray(mp.to_float(out))
+        assert np.abs(got - want).max() <= 2.0 ** -40 * np.abs(want).max()
+
+
 class TestFullCheck:
     def test_clean_pass_with_epilogue(self, tmp_cache):
         a, b = _rand("dd", (N, N), 3), _rand("dd", (N, N), 4)
