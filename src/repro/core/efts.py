@@ -113,38 +113,61 @@ def mask_split(a):
 #     partial product overflows and none is flushed beyond its ordinary
 #     <= 1/2 ulp rounding allowance (pairs summing below -968 have
 #     products whose dd tail is sub-representable anyway — inherent);
-#   * unscaling applies the > 1 inverse factors BEFORE the < 1 ones, so a
-#     huge x tiny product never transits the subnormal range on its way
-#     back (and the combined factor 2^{+-1024}, which is not itself
-#     representable, is never formed).
+#   * the rescue scales ride along as INTEGER exponents, so unscaling sums
+#     them first — an up-rescue and a down-rescue cancel to 0 before any
+#     float factor exists.  (Applying the inverse *factors* in any fixed
+#     order is wrong: for a huge x tiny pair whose product is large but
+#     representable, e.g. 2^1020 x 2^-485, the >1-first order sends the
+#     2^535-scale intermediate through 2^1047 = Inf.)  A same-direction
+#     residual of +-2*shift is applied as two normal-range half factors,
+#     since 2^{+-1024} is not itself representable.
 _RESCUE = {
-    jnp.dtype(jnp.float64): (2.0 ** -484, 2.0 ** 484, 2.0 ** 512,
-                             2.0 ** -512),
-    jnp.dtype(jnp.float32): (2.0 ** -60, 2.0 ** 60, 2.0 ** 64, 2.0 ** -64),
+    jnp.dtype(jnp.float64): (2.0 ** -484, 2.0 ** 484, 2.0 ** 512, 512),
+    jnp.dtype(jnp.float32): (2.0 ** -60, 2.0 ** 60, 2.0 ** 64, 64),
 }
 
 
 def _rescue(x):
-    """(x * s, 1/s) with s an exact pow2 moving x into the safe band.
+    """(x * s, e) with s = 2^-e an exact pow2 moving x into the safe band.
 
-    s == 1 exactly for in-band operands; NaN/Inf/0 pass through (the
-    comparisons are False on NaN, Inf scales down but stays Inf, 0 scales
-    up and stays 0).
+    The returned e is the integer UNSCALE exponent (x*s * 2^e == x * 2^0
+    scale-wise); e == 0 for in-band operands, where s == 1 exactly.
+    NaN/Inf/0 pass through (the comparisons are False on NaN, Inf scales
+    down but stays Inf, 0 scales up and stays 0).
     """
-    tiny, huge, up, down = _RESCUE[jnp.dtype(x.dtype)]
+    tiny, huge, up, shift = _RESCUE[jnp.dtype(x.dtype)]
     ax = jnp.abs(x)
-    s = jnp.where(ax < tiny, up, jnp.where(ax > huge, down, 1.0))
-    inv = jnp.where(ax < tiny, down, jnp.where(ax > huge, up, 1.0))
-    return x * s, inv
+    s = jnp.where(ax < tiny, up, jnp.where(ax > huge, 1.0 / up, 1.0))
+    e = jnp.where(ax < tiny, jnp.int32(-shift),
+                  jnp.where(ax > huge, jnp.int32(shift), jnp.int32(0)))
+    return x * s, e
 
 
-def _unscale(x, inv_a, inv_b):
-    """x * inv_a * inv_b, > 1 factors first (no intermediate under/overflow)."""
-    one = jnp.ones((), x.dtype)
-    x = x * jnp.maximum(inv_a, one)
-    x = x * jnp.maximum(inv_b, one)
-    x = x * jnp.minimum(inv_a, one)
-    return x * jnp.minimum(inv_b, one)
+def _pow2(e, dtype):
+    """Exact 2.0**e via exponent-field bitcast (e in the normal range)."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.float64:
+        bits = ((e.astype(jnp.int64) + 1023) << 52).astype(jnp.uint64)
+        return jax.lax.bitcast_convert_type(bits, jnp.float64)
+    if dtype == jnp.float32:
+        bits = ((e.astype(jnp.int32) + 127) << 23).astype(jnp.uint32)
+        return jax.lax.bitcast_convert_type(bits, jnp.float32)
+    raise ValueError(f"unsupported limb dtype {dtype}")
+
+
+def _unscale(x, ea, eb):
+    """x * 2^(ea+eb) with opposite-direction rescues cancelling exactly.
+
+    The integer sum ea+eb is formed before any float factor, so a mixed
+    huge x tiny pair unscales by 2^0 == 1 and never transits Inf or the
+    flushed subnormal range.  A same-direction sum (|ea+eb| = 2*shift,
+    whose single factor would be unrepresentable) is applied as two exact
+    normal-range halves; each half is a pow2, so every multiply is exact
+    wherever the true result is representable.
+    """
+    e = ea + eb
+    h = e // 2  # shift sums are even, so h == e - h == e/2
+    return x * _pow2(h, x.dtype) * _pow2(e - h, x.dtype)
 
 
 def two_prod(a, b):
@@ -157,8 +180,8 @@ def two_prod(a, b):
     bound holds out to the edges of the representable range (see _RESCUE);
     in-band operands compute bit-identically to the unscaled algorithm.
     """
-    a, inv_a = _rescue(a)
-    b, inv_b = _rescue(b)
+    a, ea = _rescue(a)
+    b, eb = _rescue(b)
     ah, al = mask_split(a)
     bh, bl = mask_split(b)
     m1 = ah * bh  # exact
@@ -169,7 +192,7 @@ def two_prod(a, b):
     s, e2 = two_sum(s, m3)
     s, e3 = two_sum(s, m4)
     e = e1 + (e2 + e3)
-    return _unscale(s, inv_a, inv_b), _unscale(e, inv_a, inv_b)
+    return _unscale(s, ea, eb), _unscale(e, ea, eb)
 
 
 def _mask_keep(dtype, keep: int):
@@ -201,14 +224,14 @@ def two_prod_terms(a, b):
     since the factors are powers of two), so the decomposition stays exact
     out to the edges of the representable range.
     """
-    terms, inv_a, inv_b = _scaled_terms(a, b)
-    return [_unscale(t, inv_a, inv_b) for t in terms]
+    terms, ea, eb = _scaled_terms(a, b)
+    return [_unscale(t, ea, eb) for t in terms]
 
 
 def _scaled_terms(a, b):
-    """Exact product terms of the rescued operands, plus the inverses."""
-    a, inv_a = _rescue(a)
-    b, inv_b = _rescue(b)
+    """Exact product terms of the rescued operands, plus unscale exponents."""
+    a, ea = _rescue(a)
+    b, eb = _rescue(b)
     ah, al = mask_split(a)
     bh, bl = mask_split(b)
     if jnp.dtype(a.dtype) == jnp.float64:
@@ -216,7 +239,7 @@ def _scaled_terms(a, b):
         terms = [ah * bh, ah * bl, al * bh, al * blh, al * bll]
     else:
         terms = [ah * bh, ah * bl, al * bh, al * bl]  # f32: 12/12, all exact
-    return terms, inv_a, inv_b
+    return terms, ea, eb
 
 
 def two_prod_exact(a, b):
@@ -226,7 +249,7 @@ def two_prod_exact(a, b):
     (p, e) pair: unscaling the raw terms individually could flush a small
     term that the distilled error limb would have absorbed losslessly.
     """
-    terms, inv_a, inv_b = _scaled_terms(a, b)
+    terms, ea, eb = _scaled_terms(a, b)
     for _ in range(3):  # vecsum sweeps converge the fixed-size expansion
         out = [None] * len(terms)
         s = terms[-1]
@@ -242,4 +265,4 @@ def two_prod_exact(a, b):
         # r is zero after convergence; add it anyway to keep exactness
         e = e + r
     p, e = quick_two_sum(terms[0], e)
-    return _unscale(p, inv_a, inv_b), _unscale(e, inv_a, inv_b)
+    return _unscale(p, ea, eb), _unscale(e, ea, eb)

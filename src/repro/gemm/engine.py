@@ -89,14 +89,24 @@ def _pad_to(x, rows, cols):
 
 # optimization_barrier has no batching rule in jax 0.4.x; it is identity
 # on values, so vmap passes straight through (the batched-GEMM vmap over
-# _pad would otherwise raise NotImplementedError)
-from jax.interpreters import batching as _batching  # noqa: E402
+# _pad would otherwise raise NotImplementedError).  jax >= 0.5 registers
+# its own rule, making this shim obsolete — the absence guard below keeps
+# us from overriding it.  Registration mutates a private jax dict, so it
+# is best-effort: if the internals move, _pad falls back to skipping the
+# barrier under vmap (see the NotImplementedError handler there), which
+# costs const-closure bit-reproducibility for batched operands, never
+# correctness.
+try:
+    from jax.interpreters import batching as _batching  # noqa: E402
 
-if jax.lax.optimization_barrier_p not in _batching.primitive_batchers:
-    def _ob_batch(vals, dims):
-        return jax.lax.optimization_barrier_p.bind(*vals), dims
+    if jax.lax.optimization_barrier_p not in _batching.primitive_batchers:
+        def _ob_batch(vals, dims):
+            return jax.lax.optimization_barrier_p.bind(*vals), dims
 
-    _batching.primitive_batchers[jax.lax.optimization_barrier_p] = _ob_batch
+        _batching.primitive_batchers[jax.lax.optimization_barrier_p] = \
+            _ob_batch
+except Exception:  # pragma: no cover - depends on jax internals moving
+    pass
 
 
 def _pad(x, rows, cols):
@@ -113,8 +123,13 @@ def _pad(x, rows, cols):
     # first seen on interpret-mode ozaki-pallas).  Pinning the pad output
     # makes the compiled graph per-op-faithful, so jit(const-closure),
     # jit(args), and eager all produce identical limbs.
-    return mp.from_limbs(jax.lax.optimization_barrier(
-        tuple(mp.limbs(padded))))
+    try:
+        return mp.from_limbs(jax.lax.optimization_barrier(
+            tuple(mp.limbs(padded))))
+    except NotImplementedError:
+        # under vmap on a jax whose batching registry rejected our shim:
+        # skip the barrier rather than fail (trace-time fallback)
+        return padded
 
 
 # --------------------------------------------------------------------------

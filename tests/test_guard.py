@@ -160,8 +160,12 @@ class TestExtremeScaleExactness:
     operands TestSliceOverflow rejects for the sliced ones.
     """
 
+    # the asymmetric band-crossing pairs ((1020, -485) and mirror) pin the
+    # _unscale regression where applying the >1 inverse rescue factor first
+    # sent a representable 2^535-scale product through 2^1047 == Inf
     @pytest.mark.parametrize("ea,eb", [(1005, -1005), (1000, -1000),
-                                       (-1000, 0), (990, -990)])
+                                       (-1000, 0), (990, -990),
+                                       (1020, -485), (-485, 1020)])
     def test_dd_mul_meets_bound_at_extreme_scales(self, ea, eb):
         from fractions import Fraction
 
@@ -183,6 +187,31 @@ class TestExtremeScaleExactness:
         inherent = 2.0 ** (-1021 - (ea + eb))  # flushed-limb scale / product
         assert worst <= max(4 * 2.0 ** -104, 4 * inherent), \
             f"dd.mul lost {worst:.3e} relative at scales 2^{ea} x 2^{eb}"
+
+    @pytest.mark.parametrize("ea,eb", [(126, -62), (-62, 126),
+                                       (120, -120), (-120, 0)])
+    def test_f32_two_prod_meets_bound_at_extreme_scales(self, ea, eb):
+        # f32 analogue of the band-crossing regression: (126, -62) used to
+        # overflow the _unscale intermediate to Inf despite the 2^64-scale
+        # product being comfortably representable
+        from fractions import Fraction
+
+        from repro.core import efts
+
+        rng = np.random.default_rng(13)
+        av = ((rng.random(N * N) + 0.5) * 2.0 ** ea).astype(np.float32)
+        bv = ((rng.random(N * N) + 0.5) * 2.0 ** eb).astype(np.float32)
+        p, e = efts.two_prod(jnp.asarray(av), jnp.asarray(bv))
+        p, e = np.asarray(p), np.asarray(e)
+        assert np.isfinite(p).all() and np.isfinite(e).all()
+        worst = 0.0
+        for i in range(N * N):
+            exact = Fraction(float(av[i])) * Fraction(float(bv[i]))
+            got = Fraction(float(p[i])) + Fraction(float(e[i]))
+            worst = max(worst, abs(float((got - exact) / exact)))
+        inherent = 2.0 ** (-125 - (ea + eb))  # f32 flushed-limb floor
+        assert worst <= max(4 * 2.0 ** -46, 4 * inherent), \
+            f"f32 two_prod lost {worst:.3e} relative at 2^{ea} x 2^{eb}"
 
     def test_full_check_passes_at_extreme_scale(self, tmp_cache):
         # the shadow gate used to flag these operands as finite-but-wrong;
