@@ -4,7 +4,7 @@ PY ?= python
 
 .PHONY: tier1 test-fast conformance solver-gates sharding-tests \
 	chaos-tests bench bench-gemm bench-gemm-mesh bench-smoke \
-	bench-accuracy bench-lu tune ozaki-tune
+	bench-accuracy bench-lu tune td-tune ozaki-tune
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -76,6 +76,14 @@ tune:
 	PYTHONPATH=src $(PY) -c "from repro.gemm import autotune; \
 	[autotune(n, n, n) for n in (64, 128, 256)]; \
 	[autotune(n, n, n, precision='qd') for n in (64, 128)]"
+
+# warm the td (triple-word) buckets: the systolic tile and the fused
+# Ozaki-slice kernel tune independently per limb count (cache schema v4)
+td-tune:
+	PYTHONPATH=src $(PY) -c "from repro.gemm import autotune; \
+	[autotune(n, n, n, precision='td') for n in (64, 128)]; \
+	[autotune(n, n, n, backend='ozaki-pallas', precision='td') \
+	 for n in (32, 64)]"
 
 # sweep block shapes x n_slices for the fused Ozaki-slice kernel and
 # persist the winners (dd tier at common buckets, qd at the small ones)

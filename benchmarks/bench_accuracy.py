@@ -6,9 +6,10 @@ same metric for dd64 against an exact-direction oracle (ozaki full, which
 carries ~2x the bits), plus the f64 'double' control to show the precision
 gap the paper's accelerator exists to close.
 
-Also emits ``BENCH_ACCURACY.json``: the per-tier observed relative error on
-the exact-rational Hilbert case (core/accuracy.py), the artifact the
-accuracy regression gate (tests/test_accuracy_gate.py) pins and CI uploads.
+Also emits ``BENCH_ACCURACY.json``: the per-tier (dd/td/qd) observed
+relative error on the exact-rational Hilbert case (core/accuracy.py), per
+gated backend, the artifact the accuracy regression gate
+(tests/test_accuracy_gate.py) pins and CI uploads.
 """
 
 from __future__ import annotations

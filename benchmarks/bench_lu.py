@@ -6,8 +6,9 @@ GFlops = (2/3 n^3) / T  (Eq. 7), block size b swept as in the paper
 binary128-class levels (paper's E_L1 ~ 1e-31..1e-28).
 
 The refinement sweep prices the tiered solver (repro.solve): one
-``rgesv`` row per (factor_tier -> target_tier) rung pair against the
-direct solve at the target tier, reporting wall time, refinement
+``rgesv`` row per (factor_tier -> target_tier) rung pair — every pair of
+the f64 -> dd -> td -> qd ladder, via ``solve.LADDER_CELLS`` — against
+the direct solve at the target tier, reporting wall time, refinement
 iterations, escalations, and the final backward error.  This is the
 paper's application claim in numbers — factoring at a cheap rung and
 refining GEMM-rich residuals at the target tier beats paying the

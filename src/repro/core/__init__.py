@@ -9,4 +9,4 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from . import dd, efts, mp, qd  # noqa: E402,F401
+from . import dd, efts, mp, qd, td  # noqa: E402,F401

@@ -211,15 +211,29 @@ def _normalize_slices(slices, beta: int, axis: int, slice_dtype):
             for i, s in enumerate(slices)], sc
 
 
+def _fold_diagonal_sum(acc, dsum):
+    """acc += one diagonal's native-dtype sum, in acc's own tier.
+
+    dd keeps its cheap ``add_float`` fold; wider counts distill the
+    (k+1)-term list — cheaper than lifting ``dsum`` to a full tier add.
+    """
+    if isinstance(acc, dd.DD):
+        return dd.add_float(acc, dsum)
+    k = len(acc.limbs())
+    return mp.from_limbs(
+        mp.renorm_list(list(acc.limbs()) + [dsum], k=k, sweeps=3))
+
+
 @partial(jax.jit, static_argnames=("slice_dtype_name", "acc_dtype_name",
                                    "n_slices", "beta", "full"))
-def _ozaki_impl(a_hi, a_lo, b_hi, b_lo, *, slice_dtype_name: str,
+def _ozaki_impl(*ab_limbs, slice_dtype_name: str,
                 acc_dtype_name: str, n_slices: int, beta: int, full: bool):
     slice_dtype = jnp.dtype(slice_dtype_name)
     acc_dtype = jnp.dtype(acc_dtype_name)
-    a = dd.DD(a_hi, a_lo)
-    b = dd.DD(b_hi, b_lo)
-    limb_dtype = a.hi.dtype
+    nlimbs = len(ab_limbs) // 2
+    a = mp.from_limbs(ab_limbs[:nlimbs])
+    b = mp.from_limbs(ab_limbs[nlimbs:])
+    limb_dtype = ab_limbs[0].dtype
     sa = _extract_slices(a, beta, n_slices, axis=1)
     sb = _extract_slices(b, beta, n_slices, axis=0)
 
@@ -231,12 +245,12 @@ def _ozaki_impl(a_hi, a_lo, b_hi, b_lo, *, slice_dtype_name: str,
         sa, sc_a = _normalize_slices(sa, beta, 1, slice_dtype)
         sb, sc_b = _normalize_slices(sb, beta, 0, slice_dtype)
 
-    m, n = a.hi.shape[0], b.hi.shape[1]
-    acc = dd.zeros((m, n), dtype=limb_dtype)
+    m, n = mp.limbs(a)[0].shape[0], mp.limbs(b)[0].shape[1]
+    acc = mp.zeros((m, n), mp.precision_of(a), dtype=limb_dtype)
     # diagonal-grouped recombination, most-significant diagonal first: the
     # d+1 pair dots of diagonal d sum in acc_dtype — exact by the
-    # slice_params headroom — then ONE dd fold per diagonal instead of one
-    # per slice pair.  (Separate pair dots beat one concatenated
+    # slice_params headroom — then ONE multi-limb fold per diagonal instead
+    # of one per slice pair.  (Separate pair dots beat one concatenated
     # (m,(d+1)k) dot on xla:cpu by ~2.5x: the concat copies defeat the
     # contraction's fast path; the summation is exact either way.)
     n_diag = (2 * n_slices - 1) if full else n_slices
@@ -248,15 +262,18 @@ def _ozaki_impl(a_hi, a_lo, b_hi, b_lo, *, slice_dtype_name: str,
         if narrow:
             dsum = dsum.astype(limb_dtype) * \
                 (sc_a * sc_b * (2.0 ** (-d * beta)))
-        acc = dd.add_float(acc, dsum.astype(limb_dtype))
-    return acc.hi, acc.lo
+        acc = _fold_diagonal_sum(acc, dsum.astype(limb_dtype))
+    return tuple(mp.limbs(acc))
 
 
-def ozaki_gemm(a: dd.DD, b: dd.DD, *, slice_dtype=None, acc_dtype=None,
+def ozaki_gemm(a, b, *, slice_dtype=None, acc_dtype=None,
                n_slices: int | None = None, beta: int | None = None,
-               target_bits: int = 107, full: bool = False) -> dd.DD:
+               target_bits: int = 107, full: bool = False):
     """C = A @ B via error-free slicing onto native GEMMs.
 
+    ``a``/``b`` may carry any registered limb count (the slice ladder just
+    runs deeper for wider tiers; the default ``target_bits`` covers dd —
+    pass the tier's own target, e.g. 159 for td, for wider operands).
     Defaults: f64 slices + f64 accumulation (CPU validation path).  On TPU
     pass slice_dtype=jnp.bfloat16, acc_dtype=jnp.float32 to ride the MXU.
     When called through the engine, (beta, n_slices) come from the plan
@@ -265,14 +282,14 @@ def ozaki_gemm(a: dd.DD, b: dd.DD, *, slice_dtype=None, acc_dtype=None,
     """
     acc_dtype = acc_dtype or jnp.float64
     slice_dtype = slice_dtype or jnp.float64
-    k = a.hi.shape[1]
+    k = mp.limbs(a)[0].shape[1]
     beta, n_slices = slice_params(k, acc_dtype, slice_dtype,
                                   target_bits=target_bits,
                                   n_slices=n_slices, beta=beta)
-    hi, lo = _ozaki_impl(
-        a.hi, a.lo, b.hi, b.lo,
+    out = _ozaki_impl(
+        *mp.limbs(a), *mp.limbs(b),
         slice_dtype_name=jnp.dtype(slice_dtype).name,
         acc_dtype_name=jnp.dtype(acc_dtype).name,
         n_slices=n_slices, beta=beta, full=full,
     )
-    return dd.DD(hi, lo)
+    return mp.from_limbs(out)

@@ -5,22 +5,24 @@ extra 7 bits matter, ``QD`` over f64 limbs (~212 bits) strictly dominates
 binary128; over f32 limbs (~98 bits) it is the widest VPU-native format that
 avoids f64 entirely (TPU Pallas/Mosaic has no f64 path).
 
-We use CAMPARY-style *branch-free* renormalization (bottom-up two_sum sweeps
-followed by top-down compression) rather than the branchy QD-library
-renormalize: data-dependent branches do not vectorize in JAX.  The sweeps are
-value-preserving (every step is an EFT); only the final truncation to 4 limbs
-rounds.  Empirical accuracy is property-tested in tests/test_qd.py (observed
-~2^-200 relative error for qd64 mul/add chains, comfortably past binary128's
-2^-113).
+Every operation here is a thin binding of the count-parametric kernel
+family in ``core/mp.py`` at k == 4 — the generic recipes are the same EFT
+sequences this module used to carry inline (CAMPARY branch-free
+renormalization, exact partial products through O(eps^3), five-round long
+division, DD-seeded Heron sqrt), so results are bit-identical to the
+pre-refactor code.  Empirical accuracy is property-tested in
+tests/test_qd.py (observed ~2^-200 relative error for qd64 mul/add chains,
+comfortably past binary128's 2^-113).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from .efts import quick_two_sum, two_prod_terms, two_sum
+from . import mp as _mp
+from .mp import renorm_list  # re-exported; kernels distill through it
 
 __all__ = ["QD", "from_float", "from_dd", "to_float", "to_dd", "zeros",
            "add", "sub", "mul", "mul_float", "mul_pow2", "neg", "abs_",
@@ -54,8 +56,7 @@ class QD(NamedTuple):
 
 def eps(dtype) -> float:
     """Unit roundoff of the QD format with the given limb dtype."""
-    p = 53 if jnp.dtype(dtype) == jnp.float64 else 24
-    return 2.0 ** (-4 * p)
+    return _mp.eps_for(4, dtype)
 
 
 def from_float(x, dtype=None) -> QD:
@@ -76,8 +77,7 @@ def to_float(q: QD):
 def to_dd(q: QD):
     from . import dd as _dd
 
-    s, e = quick_two_sum(q.x0, q.x1)
-    return _dd.DD(*quick_two_sum(s, e + (q.x2 + q.x3)))
+    return _dd.DD(*_mp.to_dd_limbs(q.limbs()))
 
 
 def zeros(shape, dtype=jnp.float64) -> QD:
@@ -99,53 +99,8 @@ def where(c, a: QD, b: QD) -> QD:
     return QD(*[jnp.where(c, x, y) for x, y in zip(a.limbs(), b.limbs())])
 
 
-def _vecsum_bottom_up(limbs: Sequence) -> list:
-    """Bottom-up two_sum sweep: pushes the dominant mass into limb 0.
-
-    Exact: the multiset of limbs keeps the same total value.
-    """
-    out = [None] * len(limbs)
-    s = limbs[-1]
-    for i in range(len(limbs) - 2, -1, -1):
-        s, e = two_sum(limbs[i], s)
-        out[i + 1] = e
-    out[0] = s
-    return out
-
-
-def _compress_top_down(limbs: Sequence) -> list:
-    """Top-down two_sum sweep: each error drops to the next slot. Exact."""
-    acc = limbs[0]
-    out = []
-    for i in range(1, len(limbs)):
-        acc, err = two_sum(acc, limbs[i])
-        out.append(err)
-    return [acc] + out
-
-
-def renorm_list(terms: Sequence, k: int = 4, sweeps: int = 3) -> list:
-    """Distill an arbitrary list of floats into a k-limb expansion.
-
-    Alternating exact sweeps converge the list toward a non-overlapping
-    expansion; after the final sweep the tail beyond k limbs is folded into
-    limb k-1 with ordinary (rounding) adds.
-    """
-    limbs = list(terms)
-    for _ in range(sweeps):
-        limbs = _vecsum_bottom_up(limbs)
-        limbs = _compress_top_down(limbs)
-    head, tail = limbs[: k - 1], limbs[k - 1 :]
-    last = tail[-1]
-    for t in reversed(tail[:-1]):
-        last = last + t
-    head.append(last)
-    # final canonicalizing pass
-    head = _compress_top_down(_vecsum_bottom_up(head))
-    return head
-
-
 def add(a: QD, b: QD) -> QD:
-    return QD(*renorm_list(a.limbs() + b.limbs(), k=4, sweeps=3))
+    return QD(*_mp.add_limbs(a.limbs(), b.limbs()))
 
 
 def sub(a: QD, b: QD) -> QD:
@@ -153,38 +108,20 @@ def sub(a: QD, b: QD) -> QD:
 
 
 def mul(a: QD, b: QD) -> QD:
-    """Sloppy QD multiply: exact partial products through O(eps^3).
-
-    Limb products for orders < 3 use the exact term decomposition
-    (two_prod_terms) so the distilled result carries no two_prod slack;
-    order-3 terms are plain (inexact) products, which is fine at O(eps^4).
-    """
-    al, bl = a.limbs(), b.limbs()
-    terms = []
-    for i in range(4):
-        for j in range(4):
-            o = i + j
-            if o < 3:
-                terms.extend(two_prod_terms(al[i], bl[j]))
-            elif o == 3:
-                terms.append(al[i] * bl[j])
-    return QD(*renorm_list(terms, k=4, sweeps=3))
+    """Sloppy QD multiply: exact partial products through O(eps^3);
+    order-3 terms are plain products (fine at O(eps^4))."""
+    return QD(*_mp.mul_limbs(a.limbs(), b.limbs()))
 
 
 def mul_float(a: QD, b) -> QD:
     """QD * plain-float array.  Exact partial products through limb 2,
     distilled; cheaper than lifting ``b`` to QD for a full ``mul``."""
-    b = jnp.asarray(b, a.dtype)
-    terms = []
-    for l in (a.x0, a.x1, a.x2):
-        terms.extend(two_prod_terms(l, b))
-    terms.append(a.x3 * b)
-    return QD(*renorm_list(terms, k=4, sweeps=3))
+    return QD(*_mp.mul_float_limbs(a.limbs(), b))
 
 
 def mul_pow2(a: QD, s) -> QD:
     """Exact scaling by a power of two."""
-    return QD(*[l * s for l in a.limbs()])
+    return QD(*_mp.mul_pow2_limbs(a.limbs(), s))
 
 
 def fma(acc: QD, a: QD, b: QD) -> QD:
@@ -192,61 +129,24 @@ def fma(acc: QD, a: QD, b: QD) -> QD:
 
 
 def div(a: QD, b: QD) -> QD:
-    """Long-division QD / QD: five native-quotient correction rounds.
-
-    Each round contributes ~53 bits of quotient (q_i = r.x0 / b.x0, then the
-    remainder is updated exactly-ish via ``mul_float``), so five rounds
-    overshoot the 212-bit format; the distilled q_i are the result.  Branch
-    free, like everything in this module.
-    """
-    q_terms = []
-    r = a
-    for _ in range(5):
-        qi = r.x0 / b.x0
-        q_terms.append(qi)
-        r = sub(r, mul_float(b, qi))
-    return QD(*renorm_list(q_terms, k=4, sweeps=3))
+    """Long-division QD / QD: five native-quotient correction rounds (the
+    generic k+1), overshooting the 212-bit format.  Branch free."""
+    return QD(*_mp.div_limbs(a.limbs(), b.limbs()))
 
 
 def sqrt(a: QD) -> QD:
     """QD sqrt: DD seed (~106 bits) + one Heron step s <- (s + a/s)/2.
 
-    Newton doubles the correct bits, so one step lands at ~212 — the format's
-    capacity.  Zero is guarded (the seed's 1/sqrt would inf*0 -> nan).
+    Newton doubles the correct bits, so one step lands at ~212 — the
+    format's capacity.  Zero is guarded in the generic recipe.
     """
-    from . import dd as _dd
-
-    s0 = from_dd(_dd.sqrt(to_dd(a)))
-    s = mul_pow2(add(s0, div(a, s0)), 0.5)
-    zero = a.x0 == 0
-    return QD(*[jnp.where(zero, jnp.zeros_like(l), l) for l in s.limbs()])
+    return QD(*_mp.sqrt_limbs(a.limbs()))
 
 
 def sum_(a: QD, axis=None, keepdims=False) -> QD:
     """Compensated reduction along an axis by repeated halving (every
     partial stays a full QD expansion, mirroring dd.sum_)."""
-    if axis is None:
-        flat = QD(*[l.reshape(-1) for l in a.limbs()])
-        return sum_(flat, axis=0, keepdims=keepdims)
-    cur = QD(*[jnp.moveaxis(l, axis, 0) for l in a.limbs()])
-    m = cur.x0.shape[0]
-    while m > 1:
-        half = m // 2
-        even = QD(*[l[: 2 * half : 2] for l in cur.limbs()])
-        odd = QD(*[l[1 : 2 * half : 2] for l in cur.limbs()])
-        red = add(even, odd)
-        if m % 2:
-            tail = QD(*[
-                jnp.concatenate([l[-1:], jnp.zeros_like(r[1:])], 0)
-                for l, r in zip(cur.limbs(), red.limbs())
-            ])
-            red = add(red, tail)
-        cur = red
-        m = half
-    out = QD(*[l[0] for l in cur.limbs()])
-    if keepdims:
-        out = QD(*[jnp.expand_dims(l, axis) for l in out.limbs()])
-    return out
+    return QD(*_mp.sum_limbs(a.limbs(), axis=axis, keepdims=keepdims))
 
 
 def dot(a: QD, b: QD) -> QD:

@@ -54,7 +54,7 @@ import numpy as np
 
 from repro.gemm import matmul as dd_matmul
 
-from . import dd, mp, qd
+from . import dd, mp, qd, td
 from .blas import transpose
 from .linalg import cholesky_solve, rpotrf
 
@@ -205,7 +205,7 @@ class _MLOps:
     sub = staticmethod(_ml_sub)
 
     def smul(self, s, a):
-        if isinstance(s, (dd.DD, qd.QD)):
+        if isinstance(s, (dd.DD, td.TD, qd.QD)):
             return _ml_smul_ml(mp.promote(s, mp.precision_of(a)), a)
         return _ml_smul_f(a, jnp.float64(s))
 
@@ -284,6 +284,15 @@ class _DDOps(_MLOps):
     mod = dd
 
 
+class _TDOps(_MLOps):
+    """binary192 backend: triple-word (~159-bit) limbs — the middle rung
+    between the paper's binary128 tier and binary128+, for instances
+    where dd floors the gap but a full qd run overpays."""
+
+    name = "binary192"
+    mod = td
+
+
 class _QDOps(_MLOps):
     """binary128+ backend: quad-word (~212-bit) limbs for instances where
     the dd tier's Schur-solve noise floors the gap.  The engine infers
@@ -300,6 +309,8 @@ def _ops(precision: str, gemm_overrides: dict | None = None):
         return _F64Ops()
     if precision in ("binary128", "dd", "dd64"):
         return _DDOps(gemm_overrides)
+    if precision in ("binary192", "td", "td64"):
+        return _TDOps(gemm_overrides)
     if precision in ("binary128+", "qd", "qd64"):
         return _QDOps(gemm_overrides)
     raise ValueError(f"unknown precision {precision!r}")
@@ -429,14 +440,21 @@ def _step_length(ops, mat, dmat, gamma: float) -> float:
 def solve_sdp(prob: SDPProblem, *, precision: str = "binary128",
               gemm_overrides: dict | None = None, max_iters: int = 120,
               tol_gap: float | None = None, gamma: float = 0.9,
+              schur_factor_tier: str | None = None,
               verbose: bool = False) -> SDPResult:
     """SDPA-style Mehrotra predictor-corrector PDIPM (precision-generic).
 
     ``precision`` picks the arithmetic ladder rung: ``"double"`` (f64),
-    ``"binary128"`` (dd, ~106 bits), or ``"binary128+"`` (qd, ~212 bits).
+    ``"binary128"`` (dd, ~106 bits), ``"binary192"`` (td, ~159 bits), or
+    ``"binary128+"`` (qd, ~212 bits).
     ``gemm_overrides`` feeds the GEMM engine's planner for every extended-
     precision product (default pins backend="xla"; see the Ozaki caveat
     above — the engine infers the limb count from the operand type).
+    ``schur_factor_tier`` overrides the rung the Schur system is
+    *factored* at (default dd): e.g. ``precision="binary128+"`` with
+    ``schur_factor_tier="td"`` starts the refinement ladder at td, paying
+    ~td factorization cost for the late-path iterations where dd's
+    factorization has already outlived its conditioning budget.
     Passing ``mesh=`` (plus optional ``shard_axis``/``shard_axis_n``)
     distributes every Schur-stack GEMM — including the vmap-batched
     per-constraint ``X @ (A_j Z^-1)`` stack — over a 2-D device mesh via
@@ -445,9 +463,15 @@ def solve_sdp(prob: SDPProblem, *, precision: str = "binary128",
     out-of-core K streaming for Schur stacks too deep to hold per-device.
     """
     ops = _ops(precision, gemm_overrides)
+    if schur_factor_tier is not None:
+        if not hasattr(ops, "schur_factor_tier"):
+            raise ValueError(
+                "schur_factor_tier only applies to the extended-precision "
+                "backends (binary128/binary192/binary128+)")
+        ops.schur_factor_tier = schur_factor_tier
     if tol_gap is None:
-        tol_gap = {"binary128+": 1e-40, "binary128": 1e-25}.get(
-            ops.name, 1e-12)
+        tol_gap = {"binary128+": 1e-40, "binary192": 1e-32,
+                   "binary128": 1e-25}.get(ops.name, 1e-12)
     n, m = prob.n, prob.m
 
     c = ops.wrap(prob.c)
@@ -571,7 +595,7 @@ def solve_sdp(prob: SDPProblem, *, precision: str = "binary128",
 def _hstack(ops, astack, n: int, m: int):
     """(m,n,n) -> (n, m*n) horizontal concat of the A_j."""
     f = lambda x: jnp.transpose(x, (1, 0, 2)).reshape(n, m * n)  # noqa: E731
-    if isinstance(astack, (dd.DD, qd.QD)):
+    if isinstance(astack, (dd.DD, td.TD, qd.QD)):
         return mp.map_limbs(f, astack)
     return f(astack)
 
@@ -579,6 +603,6 @@ def _hstack(ops, astack, n: int, m: int):
 def _unstack(ops, v, n: int, m: int):
     """(n, m*n) -> (m, n, n)."""
     f = lambda x: jnp.transpose(x.reshape(n, m, n), (1, 0, 2))  # noqa: E731
-    if isinstance(v, (dd.DD, qd.QD)):
+    if isinstance(v, (dd.DD, td.TD, qd.QD)):
         return mp.map_limbs(f, v)
     return f(v)

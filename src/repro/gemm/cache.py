@@ -47,9 +47,15 @@ QUARANTINE_TTL = float(os.environ.get("REPRO_QUARANTINE_TTL", 86400.0))
 # backend).  v3: keys fold in a batch bucket — a vmap-batched call runs
 # ``prod(batch)`` kernel instances concurrently, so its VMEM pressure (and
 # winning tile) differs from the 2-D bucket's by the batch factor; sharing
-# one row silently reused 2-D tiles for batched work.  Bumping the version
-# orphans old entries instead of letting them half-describe a plan.
-SCHEMA = 3
+# one row silently reused 2-D tiles for batched work.  v4: the dtype
+# segment always spells the limb count (``float64x2``, not bare
+# ``float64`` for dd) — with the count-generic tier family the count is a
+# first-class key axis, and the old dd-implicit spelling would collide
+# with any future 2-limb format variant.  Bumping the version orphans old
+# entries instead of letting them half-describe a plan: stale ``v3/...``
+# rows are simply never consulted again (plans degrade to heuristics and
+# re-tune), and stale quarantine rows are versioned separately below.
+SCHEMA = 4
 
 
 def _next_pow2(x: int, floor: int = 8) -> int:
@@ -85,7 +91,7 @@ def cache_key(platform: str, dtype_name: str, m: int, k: int, n: int,
     ``SCHEMA`` so entries written under an older entry layout are orphaned
     rather than misread.
     """
-    dt = dtype_name if nlimbs == 2 else f"{dtype_name}x{nlimbs}"
+    dt = f"{dtype_name}x{nlimbs}"
     return (f"v{SCHEMA}/{platform}/{dt}/{batch_bucket(batch_shape)}/"
             f"{shape_bucket(m, k, n)}/{backend}")
 

@@ -2,7 +2,8 @@
 
 ``execute(plan, a, b)`` routes a planned workload to its backend kernel.
 Operands are multi-limb struct-of-arrays values — ``dd.DD`` for the
-``precision="dd"`` tier (2 limbs, binary128 class) or ``qd.QD`` for
+``precision="dd"`` tier (2 limbs, binary128 class), ``td.TD`` for
+``precision="td"`` (3 limbs, ~159 bits), or ``qd.QD`` for
 ``precision="qd"`` (4 limbs, binary128+) — and every capability of the
 engine is limb-count generic:
 
@@ -32,12 +33,12 @@ engine is limb-count generic:
     accumulator stays device-resident — bit-identical to the unstreamed
     run).
 
-Backend kernels per tier: the Pallas systolic tiles (``kernels/ddgemm.py``
-/ ``kernels/qdgemm.py`` — same tile schedule, 2 vs 4 limb planes), the
-fused Ozaki-slice Pallas kernel (``kernels/ozgemm.py`` — both tiers,
+Backend kernels per tier: the count-generic Pallas systolic tile
+(``kernels/mlgemm.py`` — one tile schedule, ``nlimbs`` limb planes), the
+fused Ozaki-slice Pallas kernel (``kernels/ozgemm.py`` — every tier,
 slice-pair dots on the matrix unit with in-VMEM recombination), the
-blocked-XLA fallbacks, the O(m*k*n) oracles, and — dd only — the whole-K
-Ozaki slicing path.  Padding to block multiples is exact in multi-limb
+blocked-XLA fallbacks, the O(m*k*n) oracles, and — dd/td only — the
+whole-K Ozaki slicing path.  Padding to block multiples is exact in multi-limb
 arithmetic (zeros carry no rounding), so the engine owns all
 pad/clamp/slice logic.
 
@@ -148,18 +149,11 @@ def _execute_pallas(plan: GemmPlan, a, b):
     bm, bn, bk = blk["bm"], blk["bn"], blk["bk"]
     mpad, npad, kpad = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
     a_p, b_p = _pad(a, mpad, kpad), _pad(b, kpad, npad)
-    if plan.precision == "qd":
-        from repro.kernels.qdgemm import qdgemm_kernel_call
+    from repro.kernels.mlgemm import mlgemm_kernel_call
 
-        out = qdgemm_kernel_call(*mp.limbs(a_p), *mp.limbs(b_p),
-                                 bm=bm, bn=bn, bk=bk,
-                                 interpret=plan.interpret)
-    else:
-        from repro.kernels.ddgemm import ddgemm_kernel_call
-
-        out = ddgemm_kernel_call(*mp.limbs(a_p), *mp.limbs(b_p),
-                                 bm=bm, bn=bn, bk=bk,
-                                 interpret=plan.interpret)
+    out = mlgemm_kernel_call(*mp.limbs(a_p), *mp.limbs(b_p),
+                             bm=bm, bn=bn, bk=bk,
+                             interpret=plan.interpret)
     return mp.from_limbs([o[:m, :n] for o in out])
 
 
@@ -226,7 +220,7 @@ def _execute_2d(plan: GemmPlan, a, b):
     if plan.backend == "pallas":
         return _execute_pallas(plan, a, b)
     if plan.backend == "ozaki":
-        if plan.precision != "dd":
+        if plan.precision == "qd":
             raise ValueError("ozaki backend has no qd tier (make_plan "
                              "should have rerouted or rejected this plan)")
         from repro.core.ozaki import ozaki_gemm
@@ -242,25 +236,23 @@ def _execute_2d(plan: GemmPlan, a, b):
             kw["beta"] = plan.slice_beta
         if plan.target_bits is not None:
             kw["target_bits"] = plan.target_bits
+        elif plan.precision != "dd":
+            # hand-built plan without a solved target: cover the tier's own
+            # significand, not ozaki_gemm's dd-oriented default
+            from .plan import OZAKI_TARGET_BITS
+
+            kw["target_bits"] = OZAKI_TARGET_BITS[plan.precision]
         if plan.full is not None:
             kw["full"] = plan.full
         return ozaki_gemm(a, b, **kw)
     if plan.backend == "xla":
-        if plan.precision == "qd":
-            from repro.kernels.ops import matmul_qd_xla
+        from repro.kernels.ops import matmul_ml_xla
 
-            return matmul_qd_xla(a, b, chunk=plan.bk)
-        from repro.kernels.ops import matmul_dd_xla
-
-        return matmul_dd_xla(a, b, chunk=plan.bk)
+        return matmul_ml_xla(a, b, chunk=plan.bk)
     if plan.backend == "ref":
-        if plan.precision == "qd":
-            from repro.kernels.ref import qdgemm_ref
+        from repro.kernels.ref import mlgemm_ref
 
-            return qdgemm_ref(a, b)
-        from repro.kernels.ref import ddgemm_ref
-
-        return ddgemm_ref(a, b)
+        return mlgemm_ref(a, b)
     raise ValueError(f"unknown backend in plan: {plan.backend!r}")
 
 
@@ -942,7 +934,8 @@ def matmul(a, b, *, plan: Optional[GemmPlan] = None, alpha=None, beta=None,
     """Plan-and-execute convenience: the repo-wide GEMM entry point.
 
     The precision tier is inferred from the operand type (``dd.DD`` ->
-    ``"dd"``, ``qd.QD`` -> ``"qd"``) unless overridden.  ``overrides`` are
+    ``"dd"``, ``td.TD`` -> ``"td"``, ``qd.QD`` -> ``"qd"``) unless
+    overridden.  ``overrides`` are
     forwarded to ``make_plan`` (backend=, bm/bn/bk=, mesh=, shard_axis=,
     ...); pass a prebuilt ``plan`` to skip planning.  The two are exclusive
     — a plan already fixes every decision, so overrides alongside it would

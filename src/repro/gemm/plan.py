@@ -79,8 +79,9 @@ def fallback_chain(backend: str, precision: str = "dd"):
 _SLICED_BACKENDS = ("ozaki", "ozaki-pallas")
 
 # default significand coverage per tier for the slicing backends: dd is
-# binary128-class (the paper's format), qd is the 4-limb ~212-bit tier
-OZAKI_TARGET_BITS = {"dd": 107, "qd": 212}
+# binary128-class (the paper's format), td the 3-limb ~159-bit middle rung,
+# qd the 4-limb ~212-bit tier
+OZAKI_TARGET_BITS = {"dd": 107, "td": 159, "qd": 212}
 
 # (bm, bn, bk) heuristic defaults: the "8x16 PE / M_Tile=512" analogue from
 # the bench_tile sweep — VMEM cost = (bm*bk + bk*bn + 2*bm*bn) * 2 limbs * 4B.
@@ -104,7 +105,7 @@ class GemmPlan:
     limb_dtype: str                   # 'float64' (dd64) | 'float32' (df32)
     interpret: bool                   # pallas interpret mode (True off-TPU)
     platform: str                     # 'cpu' | 'tpu' | 'gpu'
-    precision: str = "dd"             # precision tier: dd (2 limbs) | qd (4)
+    precision: str = "dd"             # tier: dd (2 limbs) | td (3) | qd (4)
     batch: str = "none"               # none | vmap
     batch_shape: Tuple[int, ...] = ()
     shard_axis: Optional[str] = None  # mesh axis sharding the M (row) dim
@@ -342,7 +343,7 @@ def replan_precision(plan: GemmPlan, m: int, k: int, n: int,
     """Re-plan the same workload at another precision tier.
 
     The tier-escalating refinement solver climbs the ladder mid-solve
-    (f64 -> dd -> qd); structural choices (backend, platform, mesh, batch
+    (f64 -> dd -> td -> qd); structural choices (backend, platform, mesh, batch
     shape) carry over, but everything tier-dependent is *re-solved* rather
     than copied — block shapes consult the new limb count's tuned-cache
     rows, and the Ozaki slice parameters re-run their exactness fixpoint

@@ -1,142 +1,37 @@
 """Pallas systolic-tile kernel for double-word (binary128-class) GEMM.
 
-FPGA -> TPU mapping (see DESIGN.md §2):
+Thin 2-plane binding of the count-generic systolic kernel
+(``kernels/mlgemm.py``), kept as a named entry point for the dd tier.
+The FPGA -> TPU mapping (PE array -> grid, systolic pulse -> sequential K
+dimension, M_Tile buffer -> BlockSpec staging) is documented there and in
+DESIGN.md §2; ``benchmarks/bench_tile.py`` sweeps block shapes the way the
+paper sweeps M_Tile (Fig. 3).
 
-  * the `P_R x P_C` PE array  ->  the (M/bm, N/bn) Pallas grid: each grid cell
-    owns one (bm, bn) output tile and its VMEM accumulator, exactly as a PE
-    owns one C' element;
-  * the systolic pulse (A by column / B by row each cycle)  ->  the
-    *sequential* K grid dimension: at step k the cell consumes the (bm, bk)
-    slab of A and (bk, bn) slab of B, performs `bk` rank-1 DD multiply-add
-    waves, and keeps the running sum in VMEM scratch;
-  * the `M_Tile` on-chip buffer  ->  the BlockSpec block shapes: Pallas stages
-    each (bm, bk)/(bk, bn) block HBM->VMEM, which is the cache the paper adds
-    in front of the Feed module.  `benchmarks/bench_tile.py` sweeps block
-    shapes the way the paper sweeps M_Tile (Fig. 3).
+The multiply-add inside a wave resolves (via ``core.mp``) to the DD MAC
+from repro.core.dd: Dekker two_prod + two-level two_sum accumulation, ~86
+native flops per binary128 FMA.  Everything is f32-limb capable (`df32`)
+so the design lowers for real TPUs, where Mosaic has no f64; f64 limbs
+(`dd64`) run on CPU/interpret for binary128-grade validation.
 
-The multiply-add inside a wave is the DD MAC from repro.core.dd: Dekker
-two_prod + two-level two_sum accumulation, ~86 native flops per binary128
-FMA.  Everything is f32-limb capable (`df32`) so the design lowers for real
-TPUs, where Mosaic has no f64; f64 limbs (`dd64`) run on CPU/interpret for
-binary128-grade validation.
-
-The kernel is validated in interpret mode against kernels/ref.py over shape/
-dtype/block sweeps (tests/test_ddgemm_kernel.py); real-TPU deployment only
-changes `interpret=False`.
+The kernel is validated in interpret mode against kernels/ref.py over
+shape/dtype/block sweeps (tests/test_ddgemm_kernel.py); real-TPU
+deployment only changes `interpret=False`.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.core.efts import quick_two_sum, two_prod, two_sum
-
 from repro.gemm.plan import DEFAULT_BLOCKS  # noqa: F401  (canonical home)
+
+from .mlgemm import mlgemm_kernel_call
 
 __all__ = ["ddgemm_kernel_call", "DEFAULT_BLOCKS"]
 
-# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
-    pltpu.TPUCompilerParams
 
-
-def _dd_rank1_wave(acc_hi, acc_lo, a_hi, a_lo, b_hi, b_lo):
-    """One systolic wave: acc += outer(a_col, b_row) in DD arithmetic.
-
-    a_* are (bm, 1) column limbs, b_* are (1, bn) row limbs; everything
-    broadcasts to the (bm, bn) tile — one vectorized PE update.
-    """
-    # exact product of the hi limbs + cross terms (dd.mul, broadcasting
-    # (bm,1) x (1,bn) -> (bm,bn) inside the EFT)
-    p, e = two_prod(a_hi, b_hi)
-    e = e + (a_hi * b_lo + a_lo * b_hi)
-    p, e = quick_two_sum(p, e)
-    # dd.add(acc, (p, e))
-    s, f = two_sum(acc_hi, p)
-    t, g = two_sum(acc_lo, e)
-    f = f + t
-    s, f = quick_two_sum(s, f)
-    f = f + g
-    return quick_two_sum(s, f)
-
-
-def _ddgemm_kernel(a_hi_ref, a_lo_ref, b_hi_ref, b_lo_ref, o_hi_ref, o_lo_ref,
-                   acc_hi_ref, acc_lo_ref, *, bk: int):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_hi_ref[...] = jnp.zeros_like(acc_hi_ref)
-        acc_lo_ref[...] = jnp.zeros_like(acc_lo_ref)
-
-    a_hi, a_lo = a_hi_ref[...], a_lo_ref[...]  # (bm, bk)
-    b_hi, b_lo = b_hi_ref[...], b_lo_ref[...]  # (bk, bn)
-
-    def wave(i, carry):
-        acc_hi, acc_lo = carry
-        ah = jax.lax.dynamic_slice_in_dim(a_hi, i, 1, axis=1)  # (bm, 1)
-        al = jax.lax.dynamic_slice_in_dim(a_lo, i, 1, axis=1)
-        bh = jax.lax.dynamic_slice_in_dim(b_hi, i, 1, axis=0)  # (1, bn)
-        bl = jax.lax.dynamic_slice_in_dim(b_lo, i, 1, axis=0)
-        return _dd_rank1_wave(acc_hi, acc_lo, ah, al, bh, bl)
-
-    acc_hi, acc_lo = jax.lax.fori_loop(
-        0, bk, wave, (acc_hi_ref[...], acc_lo_ref[...])
-    )
-    acc_hi_ref[...] = acc_hi
-    acc_lo_ref[...] = acc_lo
-
-    @pl.when(k == pl.num_programs(2) - 1)
-    def _store():
-        o_hi_ref[...] = acc_hi_ref[...]
-        o_lo_ref[...] = acc_lo_ref[...]
-
-
-@functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
-)
 def ddgemm_kernel_call(a_hi, a_lo, b_hi, b_lo, *, bm: int, bn: int, bk: int,
                        interpret: bool = True):
     """Raw kernel invocation. Shapes must be multiples of the block shape.
 
     Use repro.kernels.ops.ddgemm for the padded/public entry point.
     """
-    m, k = a_hi.shape
-    k2, n = b_hi.shape
-    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (
-        (m, k, n), (bm, bn, bk))
-    dtype = a_hi.dtype
-    grid = (m // bm, n // bn, k // bk)
-    out_shape = [
-        jax.ShapeDtypeStruct((m, n), dtype),
-        jax.ShapeDtypeStruct((m, n), dtype),
-    ]
-    kern = functools.partial(_ddgemm_kernel, bk=bk)
-    return pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        ],
-        out_shape=out_shape,
-        scratch_shapes=[
-            pltpu.VMEM((bm, bn), dtype),
-            pltpu.VMEM((bm, bn), dtype),
-        ],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(a_hi, a_lo, b_hi, b_lo)
+    return mlgemm_kernel_call(a_hi, a_lo, b_hi, b_lo,
+                              bm=bm, bn=bn, bk=bk, interpret=interpret)

@@ -2,11 +2,13 @@
 
 ``ddgemm`` is now a thin shim over the unified execution engine
 (``repro.gemm``), which owns the zero-padding to block multiples (zeros are
-exact in DD arithmetic, so padding never changes the result), block-shape
-clamping, and tuned-tile lookup that used to live here.  ``interpret=None``
-auto-selects interpret mode off-TPU so the same call site deploys unchanged
-on hardware.  ``matmul_dd_xla`` remains the blocked-XLA backend
-implementation the engine dispatches to.
+exact in multi-limb arithmetic, so padding never changes the result),
+block-shape clamping, and tuned-tile lookup that used to live here.
+``interpret=None`` auto-selects interpret mode off-TPU so the same call
+site deploys unchanged on hardware.  ``matmul_ml_xla`` is the blocked-XLA
+backend implementation the engine dispatches to — count-generic over
+``core.mp``, with ``matmul_dd_xla``/``matmul_qd_xla`` kept as named tier
+bindings.
 """
 
 from __future__ import annotations
@@ -14,11 +16,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import dd, qd
+from repro.core import dd, mp, qd
 from repro.gemm.plan import round_up as _round_up
 from .ddgemm import DEFAULT_BLOCKS  # noqa: F401  (re-export for tuners)
 
-__all__ = ["ddgemm", "matmul_dd_xla", "matmul_qd_xla"]
+__all__ = ["ddgemm", "matmul_ml_xla", "matmul_dd_xla", "matmul_qd_xla"]
 
 
 def _pad_to(x, rows, cols):
@@ -37,70 +39,45 @@ def ddgemm(a: dd.DD, b: dd.DD, *, bm: int | None = None, bn: int | None = None,
                          interpret=interpret)
 
 
-def matmul_dd_xla(a: dd.DD, b: dd.DD, *, chunk: int = 16) -> dd.DD:
-    """Blocked XLA (non-Pallas) DD matmul — the 'host fallback' backend.
+def matmul_ml_xla(a, b, *, chunk: int = 16):
+    """Blocked XLA (non-Pallas) multi-limb matmul — the 'host fallback'.
 
-    Streams K in chunks; each chunk materializes exact (m, chunk, n) DD
-    products and reduces them with the compensated halving tree.  Used for
-    CPU-side benchmarking at sizes where the O(m*k*n) oracle is infeasible.
+    Streams K in chunks; each chunk materializes exact (m, chunk, n) tier
+    products and reduces them with the compensated halving tree, at
+    whatever limb count the operands carry.  Used for CPU-side
+    benchmarking at sizes where the O(m*k*n) oracle is infeasible.
     """
     m, k = a.shape
     _, n = b.shape
     kp = _round_up(k, chunk)
-    a = dd.DD(_pad_to(a.hi, m, kp), _pad_to(a.lo, m, kp))
-    b = dd.DD(_pad_to(b.hi, kp, n), _pad_to(b.lo, kp, n))
+    a = mp.from_limbs([_pad_to(l, m, kp) for l in mp.limbs(a)])
+    b = mp.from_limbs([_pad_to(l, kp, n) for l in mp.limbs(b)])
     nchunks = kp // chunk
 
     def body(acc, idx):
-        a_blk = dd.DD(
-            jax.lax.dynamic_slice_in_dim(a.hi, idx * chunk, chunk, 1),
-            jax.lax.dynamic_slice_in_dim(a.lo, idx * chunk, chunk, 1),
+        a_blk = mp.from_limbs([
+            jax.lax.dynamic_slice_in_dim(l, idx * chunk, chunk, 1)
+            for l in mp.limbs(a)])
+        b_blk = mp.from_limbs([
+            jax.lax.dynamic_slice_in_dim(l, idx * chunk, chunk, 0)
+            for l in mp.limbs(b)])
+        prods = mp.mul(
+            mp.map_limbs(lambda l: l[:, :, None], a_blk),
+            mp.map_limbs(lambda l: l[None, :, :], b_blk),
         )
-        b_blk = dd.DD(
-            jax.lax.dynamic_slice_in_dim(b.hi, idx * chunk, chunk, 0),
-            jax.lax.dynamic_slice_in_dim(b.lo, idx * chunk, chunk, 0),
-        )
-        prods = dd.mul(
-            dd.DD(a_blk.hi[:, :, None], a_blk.lo[:, :, None]),
-            dd.DD(b_blk.hi[None, :, :], b_blk.lo[None, :, :]),
-        )
-        part = dd.sum_(prods, axis=1)
-        acc = dd.add(acc, part)
-        return acc, None
+        part = mp.sum_(prods, axis=1)
+        return mp.add(acc, part), None
 
-    init = dd.zeros((m, n), dtype=a.hi.dtype)
+    init = mp.zeros((m, n), mp.precision_of(a), dtype=mp.limbs(a)[0].dtype)
     acc, _ = jax.lax.scan(body, init, jnp.arange(nchunks))
     return acc
+
+
+def matmul_dd_xla(a: dd.DD, b: dd.DD, *, chunk: int = 16) -> dd.DD:
+    """Blocked XLA DD matmul — the 2-limb binding of ``matmul_ml_xla``."""
+    return matmul_ml_xla(a, b, chunk=chunk)
 
 
 def matmul_qd_xla(a: qd.QD, b: qd.QD, *, chunk: int = 16) -> qd.QD:
-    """Blocked XLA (non-Pallas) QD matmul — the quad-limb 'host fallback'.
-
-    The same K-streaming structure as ``matmul_dd_xla`` but every chunk's
-    (m, chunk, n) partial products and the running accumulator are 4-limb
-    expansions built from ``core.qd``'s exact-product + renormalize FMA.
-    """
-    m, k = a.shape
-    _, n = b.shape
-    kp = _round_up(k, chunk)
-    a = qd.QD(*[_pad_to(l, m, kp) for l in a.limbs()])
-    b = qd.QD(*[_pad_to(l, kp, n) for l in b.limbs()])
-    nchunks = kp // chunk
-
-    def body(acc, idx):
-        a_blk = qd.QD(*[
-            jax.lax.dynamic_slice_in_dim(l, idx * chunk, chunk, 1)
-            for l in a.limbs()])
-        b_blk = qd.QD(*[
-            jax.lax.dynamic_slice_in_dim(l, idx * chunk, chunk, 0)
-            for l in b.limbs()])
-        prods = qd.mul(
-            qd.QD(*[l[:, :, None] for l in a_blk.limbs()]),
-            qd.QD(*[l[None, :, :] for l in b_blk.limbs()]),
-        )
-        part = qd.sum_(prods, axis=1)
-        return qd.add(acc, part), None
-
-    init = qd.zeros((m, n), dtype=a.x0.dtype)
-    acc, _ = jax.lax.scan(body, init, jnp.arange(nchunks))
-    return acc
+    """Blocked XLA QD matmul — the 4-limb binding of ``matmul_ml_xla``."""
+    return matmul_ml_xla(a, b, chunk=chunk)

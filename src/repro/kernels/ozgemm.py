@@ -13,9 +13,9 @@ scalar rank-1 EFT waves on the VPU, each grid cell here:
      in the accumulator dtype — bf16 x bf16 -> f32 on the MXU on TPU, f64
      on CPU/interpret — summing each diagonal (equal s + t) natively,
      exact by the ``slice_params`` headroom;
-  3. **recombines diagonals into the DD/QD accumulator inside VMEM
-     scratch**, one multi-limb fold per diagonal, so recombination traffic
-     never round-trips HBM;
+  3. **recombines diagonals into the multi-limb (dd/td/qd) accumulator
+     inside VMEM scratch**, one fold per diagonal, so recombination
+     traffic never round-trips HBM;
   4. at the drain step optionally applies the Rgemm **alpha/beta epilogue**
      in tier arithmetic before the C' tile leaves VMEM (``epilogue=``:
      ``"none"`` | ``"alpha"`` | ``"full"``).
@@ -26,7 +26,7 @@ bits per slice than whole-K slicing — the plan layer solves (beta,
 n_slices) for the slab depth and threads them here as static parameters.
 
 Validated in interpret mode by the cross-backend conformance matrix
-(tests/test_conformance.py) at both tiers and by tests/test_ozgemm_kernel.py.
+(tests/test_conformance.py) at every tier and by tests/test_ozgemm_kernel.py.
 """
 
 from __future__ import annotations
@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import dd, mp, qd
+from repro.core import dd, mp
 from repro.core.ozaki import _diagonal_pairs, _extract_slices, \
     _normalize_slices
 
@@ -59,18 +59,20 @@ def _fold_diagonal(acc, prod):
     limb before the tier add, so nothing is lost to the narrowing cast.
     """
     limb_dtype = acc.limbs()[0].dtype
+    k = len(acc.limbs())
     if prod.dtype == limb_dtype:
         if isinstance(acc, dd.DD):
             return dd.add_float(acc, prod)
-        # 5-limb distillation: cheaper than lifting prod to a full QD add
-        return qd.QD(*qd.renorm_list(list(acc.limbs()) + [prod],
-                                     k=4, sweeps=3))
+        # (k+1)-limb distillation: cheaper than lifting prod to a full
+        # tier add
+        return mp.from_limbs(mp.renorm_list(list(acc.limbs()) + [prod],
+                                            k=k, sweeps=3))
     hi = prod.astype(limb_dtype)
     lo = (prod - hi.astype(prod.dtype)).astype(limb_dtype)
     if isinstance(acc, dd.DD):
         return dd.add(acc, dd.from_hi_lo(hi, lo))
-    return qd.QD(*qd.renorm_list(list(acc.limbs()) + [hi, lo],
-                                 k=4, sweeps=3))
+    return mp.from_limbs(mp.renorm_list(list(acc.limbs()) + [hi, lo],
+                                        k=k, sweeps=3))
 
 
 def _slab_update(acc, a, b, *, beta, n_slices, slice_dtype, acc_dtype,
@@ -181,7 +183,8 @@ def ozgemm_kernel_call(*operands, bm: int, bn: int, bk: int, beta: int,
         raise ValueError(f"unknown epilogue {epilogue!r}; one of {EPILOGUES}")
     per_limb = {"none": 2, "alpha": 3, "full": 5}[epilogue]
     nlimbs, rem = divmod(len(operands), per_limb)
-    assert rem == 0 and nlimbs in (2, 4), (len(operands), epilogue)
+    assert rem == 0 and nlimbs in mp.PRECISIONS.values(), (
+        len(operands), epilogue)
     a_limbs = operands[:nlimbs]
     m, k = a_limbs[0].shape
     k2, n = operands[nlimbs].shape

@@ -1,19 +1,20 @@
 """Pallas systolic-tile kernel for quad-word (binary128+ class) GEMM.
 
-The quad-limb sibling of ``kernels/ddgemm.py``: identical FPGA -> TPU
-mapping (the (M/bm, N/bn) grid is the PE array, the sequential K grid
-dimension is the systolic pulse, BlockSpec staging is the M_Tile buffer —
-see DESIGN.md §2), but every operand/accumulator is **four** limb planes
-instead of two, streamed through the same tile schedule.  This is the
-runtime analogue of the parameterizable-precision FPGA designs (de Fine
-Licht et al.): the architecture is fixed, the digit count is a knob.
+Thin 4-plane binding of the count-generic systolic kernel
+(``kernels/mlgemm.py``): identical FPGA -> TPU mapping (the (M/bm, N/bn)
+grid is the PE array, the sequential K grid dimension is the systolic
+pulse, BlockSpec staging is the M_Tile buffer — see DESIGN.md §2), but
+every operand/accumulator is **four** limb planes, streamed through the
+same tile schedule.  This is the runtime analogue of the parameterizable-
+precision FPGA designs (de Fine Licht et al.): the architecture is fixed,
+the digit count is a knob.
 
 The multiply-add inside a wave is the CAMPARY-style QD FMA from
 ``repro.core.qd``: exact partial-product decomposition + branch-free
-renormalization sweeps, ~212 mantissa bits over f64 limbs.  Per-wave cost is
-roughly an order of magnitude above the DD MAC, which is exactly the
-precision/throughput trade the plan layer's ``precision`` axis exposes; the
-autotune cache keys on limb count so QD tiles tune independently of DD's.
+renormalization sweeps, ~212 mantissa bits over f64 limbs.  Per-wave cost
+is roughly an order of magnitude above the DD MAC, which is exactly the
+precision/throughput trade the plan layer's ``precision`` axis exposes;
+the autotune cache keys on limb count so QD tiles tune independently.
 
 Validated in interpret mode against ``kernels/ref.qdgemm_ref`` by the
 cross-backend conformance matrix (tests/test_conformance.py).
@@ -21,62 +22,13 @@ cross-backend conformance matrix (tests/test_conformance.py).
 
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.core import qd
+from .mlgemm import mlgemm_kernel_call
 
 __all__ = ["qdgemm_kernel_call", "NLIMBS"]
 
 NLIMBS = 4
 
-# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
-    pltpu.TPUCompilerParams
 
-
-def _qdgemm_kernel(*refs, bk: int):
-    # refs: 4 A-limb refs, 4 B-limb refs, 4 out refs, 4 accumulator scratch
-    a_refs, b_refs = refs[:NLIMBS], refs[NLIMBS:2 * NLIMBS]
-    o_refs = refs[2 * NLIMBS:3 * NLIMBS]
-    acc_refs = refs[3 * NLIMBS:]
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        for r in acc_refs:
-            r[...] = jnp.zeros_like(r)
-
-    a = [r[...] for r in a_refs]  # (bm, bk) x 4 limbs
-    b = [r[...] for r in b_refs]  # (bk, bn) x 4 limbs
-
-    def wave(i, carry):
-        # one systolic wave: acc += outer(a_col, b_row) in QD arithmetic;
-        # (bm, 1) x (1, bn) broadcasts through the EFT chains to the tile
-        a_col = qd.QD(*[
-            jax.lax.dynamic_slice_in_dim(x, i, 1, axis=1) for x in a])
-        b_row = qd.QD(*[
-            jax.lax.dynamic_slice_in_dim(x, i, 1, axis=0) for x in b])
-        out = qd.fma(qd.QD(*carry), a_col, b_row)
-        return tuple(out.limbs())
-
-    acc = jax.lax.fori_loop(0, bk, wave, tuple(r[...] for r in acc_refs))
-    for r, v in zip(acc_refs, acc):
-        r[...] = v
-
-    @pl.when(k == pl.num_programs(2) - 1)
-    def _store():
-        for o, r in zip(o_refs, acc_refs):
-            o[...] = r[...]
-
-
-@functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
-)
 def qdgemm_kernel_call(*limbs, bm: int, bn: int, bk: int,
                        interpret: bool = True):
     """Raw kernel invocation on 4 A limbs + 4 B limbs (block multiples only).
@@ -85,28 +37,5 @@ def qdgemm_kernel_call(*limbs, bm: int, bn: int, bk: int,
     for the padded/public entry point.
     """
     assert len(limbs) == 2 * NLIMBS, len(limbs)
-    a_limbs, b_limbs = limbs[:NLIMBS], limbs[NLIMBS:]
-    m, k = a_limbs[0].shape
-    k2, n = b_limbs[0].shape
-    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (
-        (m, k, n), (bm, bn, bk))
-    dtype = a_limbs[0].dtype
-    grid = (m // bm, n // bn, k // bk)
-    out_shape = [jax.ShapeDtypeStruct((m, n), dtype)] * NLIMBS
-    kern = functools.partial(_qdgemm_kernel, bk=bk)
-    return pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=(
-            [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))] * NLIMBS
-            + [pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))] * NLIMBS
-        ),
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))] * NLIMBS,
-        out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((bm, bn), dtype)] * NLIMBS,
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(*limbs)
+    return mlgemm_kernel_call(*limbs, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)

@@ -1,62 +1,50 @@
 """Pure-jnp oracles for the extended-precision GEMM kernels.
 
-These are the correctness references (the paper's CPU `Rgemm` analogue): a
-vectorized exact-product + compensated-tree-reduction matmul in DD, and a
-small-QD variant.  They favor clarity over speed and are used by every kernel
-test as the allclose target.
+These are the correctness references (the paper's CPU `Rgemm` analogue):
+``mlgemm_ref`` is the count-generic exact-product + compensated-tree-
+reduction matmul over ``core.mp``; ``ddgemm_ref``/``tdgemm_ref``/
+``qdgemm_ref`` are its named tier bindings.  They favor clarity over speed
+and are used by every kernel test as the allclose target.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import dd, qd
+from repro.core import dd, mp, qd, td
 
-__all__ = ["ddgemm_ref", "qdgemm_ref", "gemm_f64_ref"]
+__all__ = ["mlgemm_ref", "ddgemm_ref", "tdgemm_ref", "qdgemm_ref",
+           "gemm_f64_ref"]
 
 
-def ddgemm_ref(a: dd.DD, b: dd.DD) -> dd.DD:
-    """C = A @ B with DD inputs, exact products, DD tree accumulation.
+def mlgemm_ref(a, b):
+    """C = A @ B at the operands' tier: exact per-element products,
+    compensated halving-tree accumulation over k.
 
     Shapes: a (m, k), b (k, n) -> (m, n).  Memory O(m*k*n) — test sizes only.
     """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    abig = dd.DD(a.hi[:, :, None], a.lo[:, :, None])  # (m, k, 1)
-    bbig = dd.DD(b.hi[None, :, :], b.lo[None, :, :])  # (1, k, n)
-    prods = dd.mul(abig, bbig)  # (m, k, n) exact per-element DD products
-    return dd.sum_(prods, axis=1)  # compensated halving-tree reduction over k
+    abig = mp.map_limbs(lambda l: l[:, :, None], a)  # (m, k, 1)
+    bbig = mp.map_limbs(lambda l: l[None, :, :], b)  # (1, k, n)
+    prods = mp.mul(abig, bbig)  # (m, k, n) exact per-element tier products
+    return mp.sum_(prods, axis=1)  # compensated halving-tree over k
+
+
+def ddgemm_ref(a: dd.DD, b: dd.DD) -> dd.DD:
+    """C = A @ B with DD inputs, exact products, DD tree accumulation."""
+    return mlgemm_ref(a, b)
+
+
+def tdgemm_ref(a: td.TD, b: td.TD) -> td.TD:
+    """C = A @ B in triple-word arithmetic (small shapes only)."""
+    return mlgemm_ref(a, b)
 
 
 def qdgemm_ref(a: qd.QD, b: qd.QD) -> qd.QD:
     """C = A @ B in quad-word arithmetic (small shapes only)."""
-    m, k = a.shape
-    _, n = b.shape
-    al = [x[:, :, None] for x in a.limbs()]
-    bl = [x[None, :, :] for x in b.limbs()]
-    prods = qd.mul(qd.QD(*al), qd.QD(*bl))  # (m, k, n)
-    cur = prods
-    kk = k
-    while kk > 1:
-        half = kk // 2
-        left = qd.QD(*[l[:, :half, :] for l in cur.limbs()])
-        right = qd.QD(*[l[:, half : 2 * half, :] for l in cur.limbs()])
-        red = qd.add(left, right)
-        if kk % 2:
-            tail = qd.QD(*[l[:, -1:, :] for l in cur.limbs()])
-            red = qd.add(
-                red,
-                qd.QD(
-                    *[
-                        jnp.concatenate([t, jnp.zeros_like(r[:, 1:, :])], axis=1)
-                        for t, r in zip(tail.limbs(), red.limbs())
-                    ]
-                ),
-            )
-        cur = red
-        kk = half
-    return qd.QD(*[l[:, 0, :] for l in cur.limbs()])
+    return mlgemm_ref(a, b)
 
 
 def gemm_f64_ref(a, b):

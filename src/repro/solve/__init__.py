@@ -2,7 +2,8 @@
 
 ``rgesv`` (general) / ``rposv`` (SPD) factor once at a cheap ladder rung,
 refine GEMM-rich residuals at the target tier through the engine, and
-escalate f64 -> dd -> qd automatically when the residual stagnates.
+escalate up the (data-driven, ``ladder=``-overridable) rung list —
+default f64 -> dd -> td -> qd — when the residual stagnates.
 ``lu_solve_refined`` / ``cholesky_solve_refined`` bolt the same loop onto
 an existing ``rgetrf`` / ``rpotrf`` factorization.
 """

@@ -6,15 +6,16 @@ the classic mixed-precision iterative-refinement setting: factor A once at
 a cheap tier, then recover target-tier accuracy from GEMM-rich residual
 corrections,
 
-    factor   P A = L U            at  u_factor   (f64, dd, or qd)
+    factor   P A = L U            at  u_factor   (f64, dd, td, or qd)
     repeat   r = b - A x          at  u_target   (one engine ``execute``)
              d = U \\ (L \\ P r)    at  u_factor
              x = x + d            at  u_target
 
 which converges at rate ~ cond(A) * u_factor per step as long as
 cond(A) < 1/u_factor.  When it does not — the residual stagnates — the
-solver *escalates* the factorization tier up the ladder f64 -> dd -> qd
-and keeps going, so one entry point serves the whole precision range and
+solver *escalates* the factorization tier up the ladder (by default
+f64 -> dd -> td -> qd; ``ladder=`` overrides the rung sequence) and
+keeps going, so one entry point serves the whole precision range and
 only ill-conditioned solves pay for the expensive rungs (DESIGN.md §10
 has the cost model).
 
@@ -57,8 +58,11 @@ from repro.runtime import faults as _faults
 __all__ = ["TIERS", "LADDER_CELLS", "RefinementInfo", "rgesv", "rposv",
            "lu_solve_refined", "cholesky_solve_refined", "tier_eps"]
 
-# the escalation ladder, cheapest first
-TIERS = ("f64", "dd", "qd")
+# the default escalation ladder, cheapest first.  Solvers take a
+# ``ladder=`` override (any strictly-ascending subset of the supported
+# rungs), so a caller can e.g. skip td (the pre-td behavior,
+# ("f64", "dd", "qd")) or pin the climb to ("dd", "td").
+TIERS = ("f64", "dd", "td", "qd")
 
 # every meaningful (factor_tier, target_tier) pair: factor at or below
 # the target, target always an extended tier.  The single source for the
@@ -71,6 +75,7 @@ LADDER_CELLS = tuple(
 _TIER_ALIASES = {
     "f64": "f64", "double": "f64", "float64": "f64",
     "dd": "dd", "binary128": "dd", "dd64": "dd",
+    "td": "td", "binary192": "td", "td64": "td",
     "qd": "qd", "binary128+": "qd", "qd64": "qd",
 }
 
@@ -85,6 +90,28 @@ def _tier(name: str) -> str:
         return _TIER_ALIASES[name]
     except KeyError:
         raise ValueError(f"unknown tier {name!r}; one of {sorted(set(_TIER_ALIASES))}")
+
+
+def _rank(tier: str) -> int:
+    """Cost/precision rank of a rung: its limb count (f64 counts as one)."""
+    return 1 if tier == "f64" else mp.PRECISIONS[tier]
+
+
+def _resolve_ladder(ladder) -> tuple:
+    """Canonicalize a ``ladder=`` override (None -> the default TIERS).
+
+    Rungs must be known tiers in strictly-ascending precision order —
+    escalation walks the tuple left to right and each climb must actually
+    buy accuracy.
+    """
+    rungs = tuple(_tier(t) for t in (TIERS if ladder is None else ladder))
+    if not rungs:
+        raise ValueError("ladder must name at least one rung")
+    ranks = [_rank(t) for t in rungs]
+    if any(hi <= lo for lo, hi in zip(ranks, ranks[1:])):
+        raise ValueError(f"ladder rungs must be strictly ascending, "
+                         f"cheapest first; got {rungs}")
+    return rungs
 
 
 def tier_eps(tier: str) -> float:
@@ -102,9 +129,9 @@ def _is_ml(x) -> bool:
 
 
 def _as_tier(x, tier: str):
-    """Coerce an f64 array / dd / qd value to a ladder rung.
+    """Coerce an f64 array / dd / td / qd value to a ladder rung.
 
-    Climbing (f64 -> dd -> qd) is exact (zero-limb padding); descending
+    Climbing (f64 -> dd -> td -> qd) is exact (zero-limb padding); descending
     rounds to the cheaper tier — exactly what handing a residual to a
     cheap factorization wants.
     """
@@ -249,18 +276,26 @@ class RefinementInfo:
 
 def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
             max_iters, tol, stagnation_ratio, block, plan, plan_overrides,
-            max_escalations=None):
+            max_escalations=None, ladder=None):
     if max_escalations is not None and max_escalations < 0:
         raise ValueError(f"max_escalations must be >= 0 or None, "
                          f"got {max_escalations}")
-    factor_tier = _tier(factor_tier)
+    ladder = _resolve_ladder(ladder)
+    factor_tier = ladder[0] if factor_tier is None else _tier(factor_tier)
     if target_tier is None:
         target_tier = mp.precision_of(a) if _is_ml(a) else "dd"
     target_tier = _tier(target_tier)
     if target_tier == "f64":
-        raise ValueError("target_tier must be an extended tier (dd or qd); "
-                         "a plain f64 solve needs no refinement subsystem")
-    if TIERS.index(factor_tier) > TIERS.index(target_tier):
+        raise ValueError("target_tier must be an extended tier (dd, td, or "
+                         "qd); a plain f64 solve needs no refinement "
+                         "subsystem")
+    if factor_tier not in ladder:
+        raise ValueError(f"factor_tier {factor_tier!r} is not a rung of "
+                         f"the ladder {ladder}")
+    if target_tier not in ladder:
+        raise ValueError(f"target_tier {target_tier!r} is not a rung of "
+                         f"the ladder {ladder}")
+    if ladder.index(factor_tier) > ladder.index(target_tier):
         raise ValueError(f"factor_tier {factor_tier!r} is above "
                          f"target_tier {target_tier!r} on the ladder")
 
@@ -289,7 +324,7 @@ def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
     bmax = np.asarray(_col_max(b_t), np.float64)  # per (batch, column)
 
     facs: dict = {}
-    fac_counts = {t: 0 for t in TIERS}
+    fac_counts = {t: 0 for t in ladder}
     if factorization is not None:
         facs[factor_tier] = factorization
     eager = plan.mesh is not None  # shard_map path: engine jits internally
@@ -361,7 +396,7 @@ def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
             # cond >> 1/u_dd Schur complement goes indefinite under
             # rounding and NaNs).
             stagnations += 1
-            nxt = TIERS.index(factor_tier) + 1
+            nxt = ladder.index(factor_tier) + 1
             # bounded escalation: a cap turns "climb until the ladder ends"
             # into "climb at most N rungs, then return best-effort with a
             # hazard report" — the serving posture, where a runaway qd
@@ -371,15 +406,15 @@ def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
             # escalate only while an iteration remains to act on it — an
             # escalation recorded with no capacity to correct would
             # overcount the telemetry vs factorizations actually done
-            if nxt <= TIERS.index(target_tier) and it < max_iters \
+            if nxt <= ladder.index(target_tier) and it < max_iters \
                     and not capped:
                 escalations.append({
                     "iteration": it, "from": factor_tier,
-                    "to": TIERS[nxt],
+                    "to": ladder[nxt],
                     "ratio": berr / prev_berr
                     if (finite and prev_berr) else float("inf"),
                 })
-                factor_tier = TIERS[nxt]
+                factor_tier = ladder[nxt]
                 if not finite:
                     # the iterate (and its residual) are poisoned: restart
                     # from the best finite iterate and re-measure
@@ -396,9 +431,9 @@ def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
                 # decision ("escalation-capped"); the ladder top is the
                 # arithmetic's floor ("ladder-exhausted"); otherwise only
                 # the iteration budget ran out
-                if capped and nxt <= TIERS.index(target_tier):
+                if capped and nxt <= ladder.index(target_tier):
                     hazard("escalation-capped", berr)
-                elif nxt > TIERS.index(target_tier):
+                elif nxt > ladder.index(target_tier):
                     hazard("ladder-exhausted", berr)
                 else:
                     hazard("iteration-budget", berr)
@@ -436,27 +471,37 @@ def _refine(a, b, *, factor_tier, target_tier, assume, factorization,
     return x, info
 
 
-def rgesv(a, b, *, factor_tier: str = "f64",
+def rgesv(a, b, *, factor_tier: Optional[str] = None,
           target_tier: Optional[str] = None, assume: str = "gen",
           max_iters: int = 40, tol: Optional[float] = None,
           stagnation_ratio: float = 0.25, block: int = 32,
           max_escalations: Optional[int] = None,
+          ladder: Optional[Tuple[str, ...]] = None,
           plan=None, **plan_overrides):
     """Solve A x = b by factor-cheap / refine-at-target iteration.
 
-    ``a``: (n, n) — an f64 array or a dd/qd value; ``b``: (n,), (n, nrhs),
-    or batched (..., n, nrhs) (the residual GEMM rides the engine's
-    vmapped path; a ``mesh=`` override distributes it SUMMA-style over a
-    1-D or 2-D device mesh, composing with batching in the same call).  The system is
-    factored once at ``factor_tier`` (f64 | dd | qd); each iteration
-    computes r = b - A x at ``target_tier`` (default: the tier of ``a``,
-    or dd for plain arrays) as ONE engine call and back-substitutes the
-    correction through the cheap factorization.  When a step fails to cut
-    the per-column backward error ‖r‖ / (‖A‖·‖x‖ + ‖b‖) below
-    ``stagnation_ratio`` (default 0.25) of the previous one, the
-    factorization escalates one rung (f64 -> dd -> qd, capped at the
-    target tier) and refinement continues; at the ladder top it stops at
-    the tier's genuine floor.
+    ``a``: (n, n) — an f64 array or a dd/td/qd value; ``b``: (n,),
+    (n, nrhs), or batched (..., n, nrhs) (the residual GEMM rides the
+    engine's vmapped path; a ``mesh=`` override distributes it SUMMA-style
+    over a 1-D or 2-D device mesh, composing with batching in the same
+    call).  The system is factored once at ``factor_tier`` (default: the
+    ladder's first rung); each iteration computes r = b - A x at
+    ``target_tier`` (default: the tier of ``a``, or dd for plain arrays)
+    as ONE engine call and back-substitutes the correction through the
+    cheap factorization.  When a step fails to cut the per-column backward
+    error ‖r‖ / (‖A‖·‖x‖ + ‖b‖) below ``stagnation_ratio`` (default 0.25)
+    of the previous one, the factorization escalates one rung up
+    ``ladder`` (default f64 -> dd -> td -> qd, capped at the target tier)
+    and refinement continues; at the ladder top it stops at the tier's
+    genuine floor.
+
+    ``ladder`` overrides the rung sequence: any strictly-ascending tuple
+    of tiers containing the factor and target tiers, e.g.
+    ``("f64", "dd", "qd")`` for the pre-td climb or ``("dd", "td")`` to
+    pin both ends.  The default ladder's td rung matters exactly when
+    cond(A) sits between 1/u_dd (~1e32) and 1/u_td (~1e48): dd stalls
+    there, and without td the old ladder paid for a qd factorization that
+    td-grade arithmetic already covers.
 
     ``assume="pos"`` factors via Cholesky (the SDP Schur solve's path).
     ``max_escalations`` bounds the ladder climb: after that many
@@ -472,7 +517,7 @@ def rgesv(a, b, *, factor_tier: str = "f64",
     return _refine(a, b, factor_tier=factor_tier, target_tier=target_tier,
                    assume=assume, factorization=None, max_iters=max_iters,
                    tol=tol, stagnation_ratio=stagnation_ratio, block=block,
-                   max_escalations=max_escalations,
+                   max_escalations=max_escalations, ladder=ladder,
                    plan=plan, plan_overrides=plan_overrides)
 
 
@@ -486,19 +531,20 @@ def lu_solve_refined(a, lu, piv, b, *, target_tier: Optional[str] = None,
                      max_iters: int = 40, tol: Optional[float] = None,
                      stagnation_ratio: float = 0.25, block: int = 32,
                      max_escalations: Optional[int] = None,
+                     ladder: Optional[Tuple[str, ...]] = None,
                      plan=None, **plan_overrides):
     """Refinement-backed ``lu_solve``: reuse an existing ``rgetrf`` output.
 
     The factorization's own tier (inferred from ``lu``) is the starting
     rung; escalation past it re-factors ``a`` as usual (bounded by
-    ``max_escalations``, see :func:`rgesv`).  ``a`` must be the matrix
-    that was factored.
+    ``max_escalations`` and walking ``ladder``, see :func:`rgesv`).
+    ``a`` must be the matrix that was factored.
     """
     return _refine(a, b, factor_tier=mp.precision_of(lu),
                    target_tier=target_tier, assume="gen",
                    factorization=(lu, piv), max_iters=max_iters, tol=tol,
                    stagnation_ratio=stagnation_ratio, block=block,
-                   max_escalations=max_escalations,
+                   max_escalations=max_escalations, ladder=ladder,
                    plan=plan, plan_overrides=plan_overrides)
 
 
@@ -506,11 +552,12 @@ def cholesky_solve_refined(a, l, b, *, target_tier: Optional[str] = None,
                            max_iters: int = 40, tol: Optional[float] = None,
                            stagnation_ratio: float = 0.25, block: int = 32,
                            max_escalations: Optional[int] = None,
+                           ladder: Optional[Tuple[str, ...]] = None,
                            plan=None, **plan_overrides):
     """Refinement-backed ``cholesky_solve``: reuse an ``rpotrf`` factor."""
     return _refine(a, b, factor_tier=mp.precision_of(l),
                    target_tier=target_tier, assume="pos",
                    factorization=l, max_iters=max_iters, tol=tol,
                    stagnation_ratio=stagnation_ratio, block=block,
-                   max_escalations=max_escalations,
+                   max_escalations=max_escalations, ladder=ladder,
                    plan=plan, plan_overrides=plan_overrides)

@@ -2,13 +2,13 @@
 
 Pins each engine tier's observed relative error on the exact-rational
 Hilbert GEMM (core/accuracy.py — the same computation bench_accuracy emits
-to BENCH_ACCURACY.json): dd must stay within 2^-100, qd within 2^-190.
-The gate runs per backend (GATED_BACKENDS): the engine default (xla), the
-diagonal-grouped whole-K Ozaki path (dd), and the fused per-slab
-``ozaki-pallas`` kernel (dd and qd) — so a lost bit in the EFT chains, the
-slice-grid ladder, the grouped native summation, or the engine's
-pad/dispatch plumbing shows up here long before it corrupts an end-to-end
-SDP solve.
+to BENCH_ACCURACY.json): dd must stay within 2^-100, td within 2^-150,
+qd within 2^-190.  The gate runs per backend (GATED_BACKENDS): the engine
+default (xla), the diagonal-grouped whole-K Ozaki path (dd/td), and the
+fused per-slab ``ozaki-pallas`` kernel (every tier) — so a lost bit in
+the count-generic renorm chains, the slice-grid ladder, the grouped
+native summation, or the engine's pad/dispatch plumbing shows up here
+long before it corrupts an end-to-end SDP solve.
 """
 
 import json
@@ -27,6 +27,11 @@ def accuracy_doc(tmp_path_factory):
 def test_dd_tier_holds_2_pow_minus_100(accuracy_doc):
     doc, _ = accuracy_doc
     assert doc["tiers"]["dd"]["rel_err"] <= 2.0 ** -100
+
+
+def test_td_tier_holds_2_pow_minus_150(accuracy_doc):
+    doc, _ = accuracy_doc
+    assert doc["tiers"]["td"]["rel_err"] <= 2.0 ** -150
 
 
 def test_qd_tier_holds_2_pow_minus_190(accuracy_doc):

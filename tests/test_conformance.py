@@ -3,8 +3,9 @@
 One parametrized sweep over (backend x precision x shape x epilogue)
 against the per-tier ``ref`` oracle (kernels/ref.py), with per-tier ulp
 bounds.  Shapes include non-square and odd-K cases, so padding/clamping
-in the engine is exercised at both limb counts; the alpha/beta cells run
-the full Rgemm epilogue with non-representable tier scalars (1/3, -1/7).
+in the engine is exercised at every limb count (dd/td/qd); the alpha/beta
+cells run the full Rgemm epilogue with non-representable tier scalars
+(1/3, -1/7).
 
 The SUMMA axis runs the same product conformance over mesh topologies
 (1x1, 1xN, Nx1, 2x2 — the 2-D SUMMA distribution layer) against the
@@ -34,17 +35,20 @@ from repro.core import mp
 from repro.core.accuracy import max_rel_err as _rel_err
 from repro.core.blas import rgemm
 from repro.core.linalg import lu_solve, rgetrf
-from repro.kernels.ref import ddgemm_ref, qdgemm_ref
+from repro.kernels.ref import ddgemm_ref, qdgemm_ref, tdgemm_ref
 from repro.solve import rgesv
 
 # per-tier unit roundoff of one engine FMA (dd: two_prod slack dominates;
-# qd: the O(eps^4) renormalization truncation)
-ULP = {"dd": 2.0 ** -104, "qd": 2.0 ** -205}
-REF = {"dd": ddgemm_ref, "qd": qdgemm_ref}
+# td/qd: the O(eps^k) renormalization truncation)
+ULP = {"dd": 2.0 ** -104, "td": 2.0 ** -155, "qd": 2.0 ** -205}
+REF = {"dd": ddgemm_ref, "td": tdgemm_ref, "qd": qdgemm_ref}
 
 # the support matrix: whole-K ozaki has no qd tier (rejected below,
-# separately); the per-slab ozaki-pallas kernel supports both tiers
+# separately); every other backend serves every tier, and ozaki serves
+# dd and td
 CELLS = [(be, "dd") for be in ("pallas", "ozaki", "ozaki-pallas",
+                               "xla", "ref")] + \
+        [(be, "td") for be in ("pallas", "ozaki", "ozaki-pallas",
                                "xla", "ref")] + \
         [(be, "qd") for be in ("pallas", "ozaki-pallas", "xla", "ref")]
 
@@ -110,7 +114,7 @@ def test_batched_matches_looped_oracle(backend, precision, tmp_cache):
 
 
 def test_transpose_flags_compose_with_tiers(tmp_cache):
-    for precision in ("dd", "qd"):
+    for precision in ("dd", "td", "qd"):
         a = _rand(precision, (7, 10), seed=6)   # op(A) = A^T: (10, 7)
         b = _rand(precision, (7, 4), seed=7)
         got = rgemm("t", "n", 1.0, a, b, 0.0, backend="xla")

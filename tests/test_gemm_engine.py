@@ -441,11 +441,11 @@ class TestAutotuneCache:
         assert gemm.shape_bucket(128, 16, 1) == "128x16x8"
 
     def test_batched_plans_tune_apart_from_2d_bucket(self, tmp_cache):
-        # schema v3: the batch factor folds into the key — a vmap-batched
-        # plan must NOT adopt tiles tuned for the 2-D bucket (its VMEM
-        # pressure differs by the batch factor)
+        # since schema v3 the batch factor folds into the key — a
+        # vmap-batched plan must NOT adopt tiles tuned for the 2-D bucket
+        # (its VMEM pressure differs by the batch factor)
         k2d = gemm.cache_key("cpu", "float64", 100, 100, 100, "pallas")
-        assert k2d.startswith("v3/")
+        assert k2d.startswith(f"v{gemm.cache.SCHEMA}/")
         tmp_cache.put(k2d, {"bm": 32, "bn": 64, "bk": 8})
         plan = gemm.make_plan(100, 100, 100, backend="pallas",
                               platform="cpu", batch_shape=(5,))
@@ -463,6 +463,56 @@ class TestAutotuneCache:
                               batch_shape=(2, 3)) == \
             gemm.cache_key("cpu", "float64", 100, 100, 100, "pallas",
                            batch_shape=(8,))
+
+    def test_schema_v4_orphans_v3_rows_and_stale_quarantine(self, tmp_path):
+        # schema v4 spells the limb count in the dtype segment for every
+        # tier (``float64x2``, not bare ``float64`` for dd).  A cache file
+        # written under v3 must degrade to heuristics (warn-free orphaning
+        # — the rows are simply never consulted), re-tune into v4 keys,
+        # and its stale/malformed quarantine rows must answer None rather
+        # than crash plan-time quarantine checks.
+        path = tmp_path / "plans.json"
+        v3_rows = {
+            # the old dd spelling (no limb-count suffix) and an old qd row
+            "v3/cpu/float64/b1/128x128x128/pallas": {"bm": 64, "bn": 64,
+                                                     "bk": 16},
+            "v3/cpu/float64x4/b1/128x128x128/pallas": {"bm": 8, "bn": 8,
+                                                       "bk": 8},
+            # quarantine rows survive schema bumps (namespaced apart) but
+            # malformed timestamps must read as expired, not raise
+            "quarantine/v1/cpu/ozaki-pallas/x2": {"reason": "old",
+                                                  "unix_time": "not-a-time"},
+            "quarantine/v1/cpu/pallas/x3": {"reason": "no ts"},
+        }
+        path.write_text(json.dumps(v3_rows))
+        cache = gemm.PlanCache(str(path))
+        gemm.set_default_cache(cache)
+        try:
+            # v3 tuned rows are orphaned: both tiers fall back to heuristics
+            for prec, v3_bm in (("dd", 64), ("qd", 8)):
+                plan = gemm.make_plan(100, 100, 100, backend="pallas",
+                                      platform="cpu", precision=prec)
+                assert plan.source == "heuristic"
+                assert plan.bm != v3_bm or plan.source == "heuristic"
+            # stale quarantine rows: malformed timestamps answer None
+            assert gemm.quarantined("cpu", "ozaki-pallas", 2) is None
+            assert gemm.quarantined("cpu", "pallas", 3) is None
+            # re-tuning writes v4 keys alongside the orphaned v3 rows
+            for prec, nl in (("dd", 2), ("td", 3), ("qd", 4)):
+                key = gemm.cache_key("cpu", "float64", 100, 100, 100,
+                                     "pallas", nlimbs=nl)
+                assert key.startswith("v4/") and f"float64x{nl}" in key
+                cache.put(key, {"bm": 16, "bn": 32, "bk": 8})
+                plan = gemm.make_plan(100, 100, 100, backend="pallas",
+                                      platform="cpu", precision=prec)
+                assert plan.source == "tuned"
+                assert (plan.bm, plan.bn, plan.bk) == (16, 32, 8)
+            # the orphaned rows are untouched on disk (no destructive
+            # migration), and the v4 rows coexist with them
+            on_disk = json.loads(path.read_text())
+            assert all(k in on_disk for k in v3_rows)
+        finally:
+            gemm.set_default_cache(None)
 
     def test_autotune_populates_batched_bucket(self, tmp_cache):
         # autotune(batch_shape=) is the API that fills batched buckets:

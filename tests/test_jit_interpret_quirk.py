@@ -1,0 +1,99 @@
+"""Regression pin for the interpret-mode ozaki-pallas outer-jit quirk.
+
+History (PR 5): wrapping an interpret-mode ozaki-pallas product in an
+outer ``jax.jit`` with *closed-over constant* operands produced limbs
+that differed from the eager call by ~1e-17 relative (~one dd ulp of the
+leading limb, 2^-56 class).  XLA constant-folds the zero-padding of the
+operands at trace time with different rounding/fusion choices than the
+runtime path, and the interpret-mode Pallas slicing kernel is exactly
+sensitive to those last bits.  The old epilogue suite papered over it by
+comparing the jitted call against *its own* jitted output.
+
+The fix pins the padded operands behind ``jax.lax.optimization_barrier``
+(engine._pad_operand), which forbids the constant-folder from re-deriving
+them: jit(const-closure), jit(explicit-args), and eager now agree limb
+for limb.  This file is the dedicated pin: every assertion below is
+BIT-IDENTICAL (tolerance zero), and the docstrings record the historical
+~1e-17 class so a reintroduced drift is recognizable from the failure.
+
+Runs on every tier the ozaki-pallas backend advertises (dd/td/qd) plus
+the xla backend as a control — the barrier sits in the shared operand
+path, so a regression in either spelling should trip both.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import gemm
+from repro.core import mp
+
+# odd shapes force real padding: the quirk only ever bit on padded
+# operands (unpadded ones are passed through untouched)
+_M, _K, _N = 9, 11, 6
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path):
+    cache = gemm.PlanCache(str(tmp_path / "plans.json"))
+    gemm.set_default_cache(cache)
+    yield cache
+    gemm.set_default_cache(None)
+
+
+def _rand(precision, shape, seed):
+    rng = np.random.default_rng(seed)
+    out = mp.from_float(jnp.asarray(rng.standard_normal(shape)), precision)
+    for scale in (2.0 ** -53, 2.0 ** -106, 2.0 ** -159)[: mp.nlimbs(out) - 1]:
+        out = mp.add(out, mp.from_float(
+            jnp.asarray(rng.standard_normal(shape) * scale), precision))
+    return out
+
+
+def _assert_limbs_equal(got, want, what):
+    for i, (lg, lw) in enumerate(zip(mp.limbs(got), mp.limbs(want))):
+        np.testing.assert_array_equal(
+            np.asarray(lg), np.asarray(lw),
+            err_msg=f"{what}: limb {i} drifted (the historical failure "
+                    f"was ~1e-17 relative on the leading limb)")
+
+
+@pytest.mark.parametrize("backend,precision", [
+    ("ozaki-pallas", "dd"), ("ozaki-pallas", "td"), ("ozaki-pallas", "qd"),
+    ("xla", "dd"), ("xla", "td"),
+])
+def test_outer_jit_bit_identical_to_eager(backend, precision, tmp_cache):
+    """jit(const-closure) == jit(args) == eager, limb for limb."""
+    plan = gemm.make_plan(_M, _K, _N, backend=backend, precision=precision)
+    a = _rand(precision, (_M, _K), seed=20)
+    b = _rand(precision, (_K, _N), seed=21)
+
+    eager = gemm.execute(plan, a, b)
+
+    # the original failure mode: operands are trace-time constants, so
+    # the padding is eligible for constant folding
+    const_closure = jax.jit(lambda: gemm.execute(plan, a, b))()
+    _assert_limbs_equal(const_closure, eager,
+                        f"{backend}/{precision} jit(const-closure) vs eager")
+
+    # control: operands as jit arguments (never constant-folded)
+    as_args = jax.jit(
+        lambda x, y: gemm.execute(plan, x, y))(a, b)
+    _assert_limbs_equal(as_args, eager,
+                        f"{backend}/{precision} jit(args) vs eager")
+
+
+def test_outer_jit_with_epilogue_bit_identical(tmp_cache):
+    """The fused ozaki-pallas epilogue drain rides the same padded
+    operands; alpha/beta/C must not reopen the constant-folding hole."""
+    plan = gemm.make_plan(_M, _K, _N, backend="ozaki-pallas")
+    a = _rand("dd", (_M, _K), seed=22)
+    b = _rand("dd", (_K, _N), seed=23)
+    c = _rand("dd", (_M, _N), seed=24)
+
+    def run():
+        return gemm.execute(plan, a, b, alpha=0.5, beta=-2.0, c=c)
+
+    _assert_limbs_equal(jax.jit(run)(), run(),
+                        "ozaki-pallas epilogue jit(const-closure) vs eager")

@@ -91,6 +91,24 @@ def test_qd_tier_descends_past_the_dd_floor():
     assert st["factorizations"].get("dd", 0) > 0, st
 
 
+def test_binary192_tier_solves_and_overrides_schur_factor():
+    # the td rung of the SDP precision axis: binary192 runs the same PDIPM
+    # in 3-limb arithmetic, converging where double stalls, and the Schur
+    # path accepts an explicit factor-rung override (its solves then start
+    # on that rung of the refinement ladder instead of dd)
+    prob = random_sdp(6, 4, seed=3)
+    res = solve_sdp(prob, precision="binary192", max_iters=50,
+                    tol_gap=1e-18)
+    assert res.converged and res.relative_gap <= 1e-18
+    assert abs(res.primal_obj - prob.opt) < 1e-8 * max(1, abs(prob.opt))
+    res_td = solve_sdp(prob, precision="binary192", max_iters=50,
+                       tol_gap=1e-18, schur_factor_tier="td")
+    assert res_td.converged
+    assert res_td.schur_stats["factorizations"].get("td", 0) > 0
+    with pytest.raises(ValueError, match="schur_factor_tier"):
+        solve_sdp(prob, precision="double", schur_factor_tier="td")
+
+
 def test_theta_problem_structure():
     prob = theta_problem(6, 0.5, seed=0)
     assert prob.a[0].shape == (6, 6)

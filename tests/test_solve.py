@@ -92,7 +92,10 @@ def test_backward_error_history_monotone_non_increasing():
 def test_nan_factor_breakdown_escalates_and_recovers():
     # SPD with an eigenvalue (1e-40) far below dd resolution of the large
     # ones: the dd Cholesky goes indefinite under rounding and NaNs; the
-    # solver must escalate to the qd rung and still converge
+    # solver must escalate one rung and still converge.  On the default
+    # ladder the next rung is td (~159 bits, resolving cond ~1e40 with
+    # room to spare), so the breakdown recovers WITHOUT a qd
+    # factorization; the old three-rung ladder must still climb to qd.
     n = 6
     rng = np.random.default_rng(5)
     q, _ = np.linalg.qr(rng.standard_normal((n, n)))
@@ -105,8 +108,72 @@ def test_nan_factor_breakdown_escalates_and_recovers():
                     backend="xla", max_iters=20, tol=1e-30)
     assert info.converged, info.backward_errors
     assert len(info.escalations) == 1
-    assert "qd" in info.factorizations
+    assert info.factorizations == {"dd": 1, "td": 1}
     assert np.isfinite(np.asarray(mp.to_float(x))).all()
+    # the pre-td ladder spelling still climbs straight to qd
+    _, info_old = rposv(b_mat, rhs, factor_tier="dd", target_tier="qd",
+                        backend="xla", max_iters=20, tol=1e-30,
+                        ladder=("f64", "dd", "qd"))
+    assert info_old.converged and "qd" in info_old.factorizations
+
+
+def test_td_rung_spares_the_qd_factorization():
+    # The td rung's reason to exist: a system whose conditioning sits
+    # between dd's reach (1/u_dd ~ 1e32) and td's (1/u_td ~ 7e47).
+    # Hilbert n=26 (cond ~ 1e38) formed IN qd arithmetic — a multi-limb
+    # division, so the conditioning is real, not flattened by f64
+    # rounding — makes every dd-factored correction stagnate, while a td
+    # factorization converges to the qd target.
+    #
+    # Receipt (the ISSUE acceptance criterion): on the default ladder the
+    # solver climbs f64 -> dd -> td and never factors qd; on the old
+    # three-rung ladder (f64, dd, qd) the same system must pay for a full
+    # qd factorization.
+    n = 26
+    i = jnp.arange(n, dtype=jnp.float64)
+    denom = i[:, None] + i[None, :] + 1.0
+    h = mp.div(mp.from_float(jnp.ones((n, n)), "qd"),
+               mp.from_float(denom, "qd"))
+    b = matmul(h, mp.from_float(jnp.ones((n, 1)), "qd"), backend="xla")
+
+    x_new, info_new = rgesv(h, b, target_tier="qd", backend="xla",
+                            max_iters=40)
+    assert info_new.converged, info_new.backward_errors
+    assert "qd" not in info_new.factorizations, info_new.factorizations
+    assert info_new.factorizations.get("td", 0) >= 1
+    assert [(e["from"], e["to"]) for e in info_new.escalations] == \
+        [("f64", "dd"), ("dd", "td")]
+    assert info_new.factor_tiers[-1] == "td"
+
+    x_old, info_old = rgesv(h, b, target_tier="qd", backend="xla",
+                            max_iters=40, ladder=("f64", "dd", "qd"))
+    assert info_old.converged, info_old.backward_errors
+    assert info_old.factorizations.get("qd", 0) >= 1, \
+        info_old.factorizations
+    # both ladders land the same answer at qd accuracy
+    assert np.abs(np.asarray(mp.to_float(mp.sub(x_new, x_old)))).max() \
+        < 1e-25
+
+
+def test_ladder_override_validation():
+    a, b, _ = _system()
+    # unknown rung
+    with pytest.raises(ValueError, match="unknown tier"):
+        rgesv(a, b, ladder=("f64", "xx"))
+    # not strictly ascending
+    with pytest.raises(ValueError, match="ascending"):
+        rgesv(a, b, ladder=("dd", "f64"))
+    with pytest.raises(ValueError, match="ascending"):
+        rgesv(a, b, ladder=("dd", "dd"))
+    # factor/target must be rungs of the ladder
+    with pytest.raises(ValueError, match="ladder"):
+        rgesv(a, b, factor_tier="td", ladder=("f64", "dd", "qd"))
+    with pytest.raises(ValueError, match="ladder"):
+        rgesv(a, b, target_tier="qd", ladder=("f64", "dd", "td"))
+    # a valid custom ladder works and caps the climb at its top rung
+    x, info = rgesv(a, b, target_tier="td", ladder=("dd", "td"))
+    assert info.converged and mp.precision_of(x) == "td"
+    assert info.factorizations == {"dd": 1}
 
 
 def test_backward_error_is_per_column():

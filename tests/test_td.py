@@ -1,0 +1,261 @@
+"""Property + oracle tests for triple-word arithmetic (the td rung).
+
+Mirrors tests/test_qd.py for the 3-limb tier, with one structural change:
+the exact-rational (Fraction) oracle tests run unconditionally on seeded
+inputs, and only the randomized property sweep is gated on hypothesis
+being installed — so the tier keeps real coverage on machines without the
+dev extras.
+
+td carries ~159 bits (3 x 53); every gate below beats binary128's 113-bit
+significand with margin and sits a few ulp above td's own 2^-159 eps.
+"""
+
+from fractions import Fraction
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dd, mp, qd, td
+
+# binary128 unit roundoff is 2^-113; td must beat it with margin.
+TD_TARGET = 2.0**-120
+
+# multi-op chains (dot accumulation, sqrt round-trip) gate a few bits
+# above the single-op target but far below dd's 2^-106 capability
+TD_CHAIN_TARGET = 2.0**-135
+
+
+def _td_frac(x) -> Fraction:
+    return sum((Fraction(float(l)) for l in x.limbs()), Fraction(0))
+
+
+def _rel(got: Fraction, want: Fraction) -> float:
+    if want == 0:
+        return float(abs(got))
+    return abs(float((got - want) / want))
+
+
+def _rand_td(rng, shape=()):
+    """A td value with signal in all three limbs (canonical by renorm)."""
+    limbs = [jnp.asarray(rng.standard_normal(shape) * s)
+             for s in (1.0, 2.0**-53, 2.0**-106)]
+    return mp.from_limbs(mp.renorm_list(limbs, k=3))
+
+
+# --------------------------------------------------------------------------
+# deterministic Fraction-oracle tests (always run)
+# --------------------------------------------------------------------------
+
+
+def test_add_mul_fraction_oracle():
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        a, b = _rand_td(rng), _rand_td(rng)
+        fa, fb = _td_frac(a), _td_frac(b)
+        assert _rel(_td_frac(td.add(a, b)), fa + fb) <= TD_TARGET
+        assert _rel(_td_frac(td.mul(a, b)), fa * fb) <= TD_TARGET
+        assert _rel(_td_frac(td.sub(a, b)), fa - fb) <= TD_TARGET
+
+
+def test_div_fraction_oracle():
+    rng = np.random.default_rng(1)
+    for _ in range(25):
+        a, b = _rand_td(rng), _rand_td(rng)
+        fb = _td_frac(b)
+        if fb == 0:
+            continue
+        assert _rel(_td_frac(td.div(a, b)), _td_frac(a) / fb) <= TD_TARGET
+
+
+def test_fma_fraction_oracle():
+    rng = np.random.default_rng(2)
+    for _ in range(25):
+        acc, a, b = _rand_td(rng), _rand_td(rng), _rand_td(rng)
+        got = _td_frac(td.fma(acc, a, b))
+        want = _td_frac(acc) + _td_frac(a) * _td_frac(b)
+        assert _rel(got, want) <= TD_TARGET
+
+
+def test_accumulation_chain_precision():
+    # Accumulate 512 products; relative error must stay far below 2^-113.
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal(512)
+    b = rng.standard_normal(512)
+    va = td.from_float(jnp.asarray(a))
+    vb = td.from_float(jnp.asarray(b))
+    prod = td.mul(va, vb)
+    cur = prod
+    m = 512
+    while m > 1:
+        half = m // 2
+        cur = td.add(td.TD(*[l[:half] for l in cur.limbs()]),
+                     td.TD(*[l[half:2 * half] for l in cur.limbs()]))
+        m = half
+    got = _td_frac(td.TD(*[l[0] for l in cur.limbs()]))
+    want = sum((Fraction(x) * Fraction(y) for x, y in zip(a, b)),
+               Fraction(0))
+    assert _rel(got, want) < TD_CHAIN_TARGET
+
+
+def test_sqrt_squares_back():
+    rng = np.random.default_rng(4)
+    for _ in range(25):
+        a = abs(rng.standard_normal()) * 10.0 ** rng.integers(-20, 20)
+        s = td.sqrt(td.from_float(jnp.float64(a)))
+        assert _rel(_td_frac(td.mul(s, s)), Fraction(a)) <= TD_CHAIN_TARGET
+    # zero guard: sqrt(0) is 0, not NaN from the Heron divide
+    z = td.sqrt(td.from_float(jnp.float64(0.0)))
+    assert float(td.to_float(z)) == 0.0
+
+
+def test_renorm_idempotence():
+    rng = np.random.default_rng(5)
+    for _ in range(25):
+        terms = [jnp.float64(rng.standard_normal() * s)
+                 for s in (1.0, 1e-16, 1e-32)]
+        once = td.renorm_list(terms, k=3, sweeps=3)
+        twice = td.renorm_list(once, k=3, sweeps=3)
+        for l1, l2 in zip(once, twice):
+            assert float(l1) == float(l2)
+
+
+def test_promotion_roundtrips_exact():
+    rng = np.random.default_rng(6)
+    d = mp.from_limbs(mp.renorm_list(
+        [jnp.asarray(rng.standard_normal(8)),
+         jnp.asarray(rng.standard_normal(8) * 2.0**-53)], k=2))
+    # climbing pads zero limbs — exact both hops, and descending back
+    # re-distills the same value bit for bit
+    t = mp.promote(d, "td")
+    q = mp.promote(t, "qd")
+    back_t = mp.promote(q, "td")
+    back_d = mp.promote(back_t, "dd")
+    for l1, l2 in zip(mp.limbs(t), mp.limbs(back_t)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    for l1, l2 in zip(mp.limbs(d), mp.limbs(back_d)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_to_dd_roundtrip():
+    t = td.from_float(jnp.float64(3.5))
+    assert float(dd.to_float(td.to_dd(t))) == 3.5
+    # from_dd lifts exactly: the third limb is zero
+    d = dd.add(dd.from_float(jnp.float64(1.0)),
+               dd.from_float(jnp.float64(1e-17)))
+    lifted = td.from_dd(d)
+    assert float(lifted.x2) == 0.0
+    rt = td.to_dd(lifted)
+    assert float(rt.hi) == float(d.hi) and float(rt.lo) == float(d.lo)
+
+
+def test_from_limbs_all_supported_counts():
+    # the old mp.from_limbs rejected 3 limbs with "want 2 or 4"; any
+    # registered count must construct now, and unknown counts must name
+    # the supported set
+    one = jnp.float64(1.0)
+    assert mp.precision_of(mp.from_limbs([one] * 2)) == "dd"
+    assert mp.precision_of(mp.from_limbs([one] * 3)) == "td"
+    assert mp.precision_of(mp.from_limbs([one] * 4)) == "qd"
+    with pytest.raises(ValueError, match=r"\[2, 3, 4\]"):
+        mp.from_limbs([one] * 5)
+    with pytest.raises(ValueError, match=r"\[2, 3, 4\]"):
+        mp.from_limbs([one])
+
+
+def test_eps_ordering():
+    assert mp.eps("dd") > mp.eps("td") > mp.eps("qd")
+    assert mp.eps("td") == 2.0 ** -159
+
+
+def test_where_and_zeros_shapes():
+    z = td.zeros((3, 2))
+    assert z.shape == (3, 2) and all(
+        float(l.sum()) == 0.0 for l in z.limbs())
+    picked = td.where(jnp.asarray([[True], [False], [True]]),
+                      td.from_float(jnp.ones((3, 2))), z)
+    assert np.asarray(td.to_float(picked)).tolist() == [
+        [1.0, 1.0], [0.0, 0.0], [1.0, 1.0]]
+
+
+def test_mixed_count_add_rejected():
+    a = td.from_float(jnp.float64(1.0))
+    b = qd.from_float(jnp.float64(1.0))
+    with pytest.raises(TypeError):
+        mp.add(a, b)
+
+
+# --------------------------------------------------------------------------
+# randomized property sweep (needs hypothesis; mirrors tests/test_qd.py)
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev extras absent
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    # normal-range magnitudes only (XLA CPU flushes subnormals)
+    finite = st.floats(
+        allow_nan=False, allow_infinity=False,
+        min_value=-1e50, max_value=1e50,
+    ).filter(lambda x: x == 0.0 or abs(x) > 1e-50)
+
+    @settings(max_examples=100, deadline=None)
+    @given(finite, finite)
+    def test_add_beats_binary128(a, b):
+        ta = td.from_float(jnp.float64(a))
+        tb = td.from_float(jnp.float64(b))
+        got = _td_frac(td.add(ta, tb))
+        assert _rel(got, Fraction(a) + Fraction(b)) <= TD_TARGET
+
+    @settings(max_examples=100, deadline=None)
+    @given(finite, finite)
+    def test_mul_beats_binary128(a, b):
+        ta = td.from_float(jnp.float64(a))
+        tb = td.from_float(jnp.float64(b))
+        # product of two f64 values fits in 106 bits -> exact in td
+        assert _rel(_td_frac(td.mul(ta, tb)),
+                    Fraction(a) * Fraction(b)) <= TD_TARGET
+
+    @settings(max_examples=50, deadline=None)
+    @given(finite, finite, finite, finite)
+    def test_mul_of_dd_inputs(a, b, c, e):
+        ta = td.from_dd(dd.add(dd.from_float(jnp.float64(a)),
+                               dd.from_float(jnp.float64(b * 1e-18))))
+        tb = td.from_dd(dd.add(dd.from_float(jnp.float64(c)),
+                               dd.from_float(jnp.float64(e * 1e-18))))
+        got = _td_frac(td.mul(ta, tb))
+        want = _td_frac(ta) * _td_frac(tb)
+        assert _rel(got, want) <= TD_TARGET
+
+    @settings(max_examples=50, deadline=None)
+    @given(finite, finite, finite)
+    def test_add_associativity_error_bound(a, b, c):
+        ta, tb, tc = (td.from_float(jnp.float64(v)) for v in (a, b, c))
+        want = Fraction(a) + Fraction(b) + Fraction(c)
+        left = _td_frac(td.add(td.add(ta, tb), tc))
+        right = _td_frac(td.add(ta, td.add(tb, tc)))
+        assert _rel(left, want) <= TD_TARGET
+        assert _rel(right, want) <= TD_TARGET
+
+    @settings(max_examples=50, deadline=None)
+    @given(finite, finite)
+    def test_div_beats_binary128(a, b):
+        if b == 0:
+            return
+        got = _td_frac(td.div(td.from_float(jnp.float64(a)),
+                              td.from_float(jnp.float64(b))))
+        assert _rel(got, Fraction(a) / Fraction(b)) <= TD_TARGET
+
+    @settings(max_examples=100, deadline=None)
+    @given(finite, finite)
+    def test_from_dd_to_dd_roundtrip_exact(a, b):
+        d = dd.add(dd.from_float(jnp.float64(a)),
+                   dd.from_float(jnp.float64(b * 1e-17)))
+        rt = td.to_dd(td.from_dd(d))
+        assert float(rt.hi) == float(d.hi)
+        assert float(rt.lo) == float(d.lo)
